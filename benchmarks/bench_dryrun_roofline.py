@@ -1,0 +1,40 @@
+"""Roofline summary from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and emits
+one row per (arch, shape, mesh) with the three roofline terms; does not
+compile anything itself."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def run(quick: bool = False) -> None:
+    if not ART.exists():
+        emit("roofline/no_artifacts", "0",
+             "run: python -m repro.launch.dryrun --all --mesh both")
+        return
+    for f in sorted(ART.glob("*.json")):
+        d = json.loads(f.read_text())
+        tag = f"{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d["status"] == "skipped":
+            emit(f"roofline/{tag}", "skip", d.get("reason", ""))
+            continue
+        if d["status"] != "ok":
+            emit(f"roofline/{tag}", "FAIL", d.get("error", "")[:80])
+            continue
+        r = d["roofline"]
+        lb = r["step_time_lower_bound"]
+        emit(f"roofline/{tag}", f"{lb * 1e6:.1f}",
+             f"bottleneck={r['bottleneck']};compute_s={r['t_compute']:.4g};"
+             f"memory_s={r['t_memory']:.4g};collective_s={r['t_collective']:.4g};"
+             f"mfu_bound={r['mfu_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

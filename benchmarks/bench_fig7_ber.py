@@ -1,0 +1,18 @@
+"""Paper Fig. 7: bit error rate vs write-verify cycles (3-bit MLC)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.imc.device import DeviceConfig, bit_error_rate
+
+
+def run() -> None:
+    for material in ("tite2", "sb2te3"):
+        for c in range(7):
+            ber = bit_error_rate(DeviceConfig(material, 3, c))
+            emit(f"fig7/{material}/wv{c}/ber", f"{ber:.4f}",
+                 "decreases_with_write_verify")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Fig. S4/S5: quality vs HD dimension for DB search and clustering
+(+ the linear latency/energy scaling the paper notes)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import SpecPCMConfig, run_clustering, run_db_search
+from repro.core.imc.energy import DATASETS, db_search_cost
+from repro.spectra import SyntheticMSConfig, generate_dataset
+from repro.spectra.synthetic import generate_query_set
+
+
+def run(quick: bool = False) -> None:
+    ms = SyntheticMSConfig(num_identities=32, spectra_per_identity=6,
+                           num_bins=1024, dropout=0.3, intensity_jitter=0.4,
+                           noise_peaks=24, peaks_per_peptide=32)
+    ds = generate_dataset(ms)
+    refs = ds.templates / jnp.maximum(ds.templates.max(1, keepdims=True), 1e-6)
+    ref_prec = jnp.asarray(np.asarray(ds.precursor)[::ms.spectra_per_identity])
+    q = generate_query_set(ds, ms, num_queries=64)
+    d = DATASETS["HEK293"]
+
+    for dim in (513, 1026, 2049, 4098, 8193):
+        cfg = SpecPCMConfig(hd_dim=dim, mlc_bits=3, num_levels=16,
+                            material="tite2", write_verify=3)
+        rep = run_db_search(q.spectra, q.precursor, refs, ref_prec, cfg,
+                            query_identity=q.identity,
+                            ref_identity=jnp.arange(ms.num_identities))
+        cost = db_search_cost(d["num_queries"], d["num_refs"], hd_dim=dim,
+                              candidate_fraction=d["candidate_fraction"])
+        emit(f"figS4/dim{dim}/recall", f"{rep.recall:.3f}",
+             f"hek293_latency_s={cost.latency_s:.4f}")
+
+    for dim in (513, 1026, 2049):
+        cfg = SpecPCMConfig(hd_dim=dim, mlc_bits=3, num_levels=16,
+                            material="sb2te3")
+        rep = run_clustering(ds.spectra, ds.precursor, ds.identity, cfg)
+        emit(f"figS5/dim{dim}/clustered_ratio", f"{rep.clustered_ratio:.4f}",
+             f"incorrect={rep.incorrect_ratio:.4f}")
+
+
+if __name__ == "__main__":
+    run()

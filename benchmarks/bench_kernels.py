@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: host wall-time of the jnp reference paths (the
+measurable quantity on CPU) + the bit-packed beyond-paper path, with the
+derived column carrying the analytic IMC-chip numbers for the same op."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.hd.similarity import (
+    bitpack_bipolar, dot_similarity, hamming_similarity_packed,
+)
+from repro.core.imc.array import ArrayConfig, default_full_scale
+from repro.core.imc.energy import DEFAULT_HW, stripes
+from repro.kernels.imc_mvm.ref import imc_mvm_ref
+
+
+def run(quick: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    qn, rn, d = (64, 2048, 2049) if quick else (128, 8192, 8193)
+    dp = d // 3
+
+    q = jnp.asarray(rng.integers(-3, 4, (qn, dp)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-3, 4, (rn, dp)).astype(np.float32))
+    fs = default_full_scale(ArrayConfig())
+
+    f_imc = jax.jit(lambda a, b: imc_mvm_ref(a, b, full_scale=fs))
+    us = time_call(f_imc, q, w)
+    ops = qn * (-(-rn // 128)) * stripes(dp)
+    chip_us = ops * DEFAULT_HW.cycles_per_mvm / DEFAULT_HW.parallel_arrays \
+        / DEFAULT_HW.clock_hz * 1e6
+    emit("kernels/imc_mvm_ref_cpu", f"{us:.1f}",
+         f"Q={qn};R={rn};Dp={dp};modeled_chip_us={chip_us:.1f}")
+
+    # dense int path (what a GPU/TPU baseline does)
+    a8 = jnp.asarray(rng.choice([-1, 1], (qn, d)).astype(np.int8))
+    b8 = jnp.asarray(rng.choice([-1, 1], (rn, d)).astype(np.int8))
+    f_dense = jax.jit(dot_similarity)
+    us_dense = time_call(f_dense, a8, b8)
+    emit("kernels/dense_dot_int8_cpu", f"{us_dense:.1f}", f"Q={qn};R={rn};D={d}")
+
+    # bit-packed popcount path (beyond-paper, 32x less traffic)
+    d32 = (d // 32) * 32
+    ap = bitpack_bipolar(a8[:, :d32])
+    bp = bitpack_bipolar(b8[:, :d32])
+    f_pop = jax.jit(lambda x, y: hamming_similarity_packed(x, y, d32))
+    us_pop = time_call(f_pop, ap, bp)
+    emit("kernels/hamming_popcount_cpu", f"{us_pop:.1f}",
+         f"Q={qn};R={rn};D={d32};speedup_vs_dense={us_dense / us_pop:.2f}x")
+
+    # Pallas kernels in interpret mode are correctness artifacts, not perf;
+    # emit their numerical agreement instead of timing
+    from repro.kernels.imc_mvm.ops import imc_mvm_pallas
+    small_q, small_w = q[:16, :256], w[:32, :256]
+    out_k = imc_mvm_pallas(small_q, small_w, full_scale=fs)
+    out_r = imc_mvm_ref(small_q, small_w, full_scale=fs)
+    err = float(jnp.max(jnp.abs(out_k - out_r)))
+    emit("kernels/imc_mvm_pallas_interpret_maxerr", f"{err:.2e}",
+         "vs_ref_oracle")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Table 2: clustering latency/speedup vs published baselines.
+
+Our analytic hardware model (calibrated once, EXPERIMENTS.md §Tables) is
+evaluated on the paper's two dataset scales and compared against the
+paper's published baseline and SpecPCM numbers.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.imc.energy import (
+    DATASETS, PAPER_TABLE2, clustering_cost,
+)
+
+
+def run() -> None:
+    for ds in ("PXD001468", "PXD000561"):
+        n = DATASETS[ds]["num_spectra"]
+        ours = clustering_cost(n)
+        falcon = PAPER_TABLE2[ds]["Falcon(CPU)"]
+        paper = PAPER_TABLE2[ds]["SpecPCM(paper)"]
+        emit(f"table2/{ds}/model_latency_s", f"{ours.latency_s:.3f}",
+             f"paper={paper:.2f}s err={abs(ours.latency_s - paper) / paper:.1%}")
+        emit(f"table2/{ds}/speedup_vs_falcon", f"{falcon / ours.latency_s:.1f}",
+             f"paper_claims={falcon / paper:.1f}x")
+        emit(f"table2/{ds}/energy_j", f"{ours.energy_j:.3f}",
+             "paper=3.27J" if ds == "PXD000561" else "")
+        for tool, lat in PAPER_TABLE2[ds].items():
+            emit(f"table2/{ds}/baseline/{tool}", f"{lat:.3f}", "published")
+
+
+if __name__ == "__main__":
+    run()

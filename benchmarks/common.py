@@ -1,0 +1,24 @@
+"""Shared benchmark utilities: timing + CSV row emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time of fn(*args) in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float | str, derived: str = "") -> None:
+    print(f"{name},{us_per_call},{derived}", flush=True)

@@ -1,0 +1,59 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Set REPRO_BENCH_QUICK=1 for
+the fast path (used by CI/tests)."""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+    from benchmarks import (
+        bench_table2_clustering,
+        bench_table3_dbsearch,
+        bench_fig7_ber,
+        bench_fig9_clustering_quality,
+        bench_fig10_dbsearch_quality,
+        bench_figS3_tradeoffs,
+        bench_figS4S5_hddim,
+        bench_kernels,
+        bench_dryrun_roofline,
+    )
+
+    suites = [
+        ("table2_clustering", bench_table2_clustering.run, {}),
+        ("table3_dbsearch", bench_table3_dbsearch.run, {}),
+        ("fig7_ber", bench_fig7_ber.run, {}),
+        ("fig9_clustering_quality", bench_fig9_clustering_quality.run,
+         {"quick": quick}),
+        ("fig10_dbsearch_quality", bench_fig10_dbsearch_quality.run,
+         {"quick": quick}),
+        ("figS3_tradeoffs", bench_figS3_tradeoffs.run, {"quick": quick}),
+        ("figS4S5_hddim", bench_figS4S5_hddim.run, {"quick": quick}),
+        ("kernels", bench_kernels.run, {"quick": quick}),
+        ("dryrun_roofline", bench_dryrun_roofline.run, {}),
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn, kw in suites:
+        t0 = time.time()
+        try:
+            fn(**kw)
+            print(f"suite/{name},{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"suite/{name},0,FAILED", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

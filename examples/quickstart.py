@@ -1,0 +1,46 @@
+"""Quickstart: encode spectra into hypervectors, pack them for 3-bit MLC,
+program a (simulated) PCM bank, and run an in-memory similarity search.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SpecPCMConfig, encode_and_pack, imc_scores
+from repro.core.imc.energy import db_search_cost
+from repro.spectra import SyntheticMSConfig, generate_dataset
+
+
+def main():
+    # 1. make a small synthetic MS dataset (64 peptides x 4 replicates)
+    ms = SyntheticMSConfig(num_identities=64, spectra_per_identity=4,
+                           num_bins=1024)
+    ds = generate_dataset(ms)
+    print(f"dataset: {ds.num_spectra} spectra, {ms.num_bins} m/z bins")
+
+    # 2. HD-encode + dimension-pack (Eq. 1 + §III.B of the paper)
+    cfg = SpecPCMConfig(hd_dim=2049, mlc_bits=3, num_levels=16)
+    packed = encode_and_pack(ds.spectra, cfg)
+    print(f"packed HVs: {packed.shape} int8 (D={cfg.hd_dim} -> "
+          f"D/n={packed.shape[1]} for {cfg.mlc_bits}-bit MLC)")
+
+    # 3. search the first replicate of each identity against all others
+    queries = packed[::4]
+    scores = imc_scores(queries, packed, cfg, jax.random.PRNGKey(0))
+    best = np.asarray(jnp.argsort(-scores, axis=1)[:, 1])  # skip self
+    truth = np.asarray(ds.identity)
+    acc = (truth[best] == truth[::4]).mean()
+    print(f"nearest-neighbor identity accuracy through the analog chain: "
+          f"{acc:.1%}")
+
+    # 4. what would this cost on the SpecPCM chip?
+    cost = db_search_cost(num_queries=64, num_refs=256, hd_dim=cfg.hd_dim,
+                          candidate_fraction=1.0)
+    print(f"modeled chip cost: {cost.latency_s * 1e6:.2f} us, "
+          f"{cost.energy_j * 1e9:.1f} nJ")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Train a small LM with the paper's IMC quantized matmul in the loop.
+
+Every FFN down-projection runs through the SpecPCM analog-chain model
+(DAC-quantized activations x MLC-packed weights, per-tile ADC quantization,
+straight-through gradients) — the accuracy-under-IMC study for transformer
+workloads. Compares against an exact-matmul control.
+
+    PYTHONPATH=src python examples/train_lm_imc.py --steps 300
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.models import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def train(cfg, steps, batch, seq, lr, label):
+    model = build_model(cfg)
+    state, _ = init_train_state(model, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(batch=batch, seq=seq, vocab=cfg.vocab_size)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=lr, warmup_steps=20,
+                                             total_steps=steps))
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        state, m = step_fn(state, pipe.get_for(cfg, s))
+        losses.append(float(m["loss"]))
+        if (s + 1) % max(steps // 10, 1) == 0:
+            print(f"  [{label}] step {s + 1}/{steps} loss={losses[-1]:.4f} "
+                  f"({(time.time() - t0) / (s + 1):.2f}s/step)", flush=True)
+    return losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=256)
+    args = ap.parse_args(argv)
+
+    base = dataclasses.replace(
+        get_config("qwen2_7b").reduced(),
+        num_layers=args.layers, d_model=args.d_model,
+        num_heads=8, num_kv_heads=2, head_dim=32,
+        d_ff=4 * args.d_model, vocab_size=4096,
+    )
+    # ~100M-class when scaled up; defaults stay CPU-friendly
+
+    print(f"model: {args.layers}L d={args.d_model} "
+          f"(~{6 * args.layers * args.d_model * args.d_model * 1e-6:.1f}M core params)")
+
+    print("== control: exact matmuls ==")
+    l_exact = train(base, args.steps, args.batch, args.seq, args.lr, "exact")
+
+    print("== IMC: FFN down-proj through the SpecPCM analog chain ==")
+    cfg_imc = dataclasses.replace(base, imc_linear=True)
+    l_imc = train(cfg_imc, args.steps, args.batch, args.seq, args.lr, "imc")
+
+    gap = l_imc[-1] - l_exact[-1]
+    print(f"final loss: exact={l_exact[-1]:.4f} imc={l_imc[-1]:.4f} "
+          f"gap={gap:+.4f}")
+    print("conclusion:", "IMC-quantized training tracks the exact baseline"
+          if abs(gap) < 0.3 else "IMC quantization is costing accuracy at "
+          "this scale — increase ADC bits or HD dim")
+    assert np.isfinite(l_imc).all()
+
+
+if __name__ == "__main__":
+    main()

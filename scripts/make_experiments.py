@@ -1,0 +1,13 @@
+"""Splice the generated roofline table and perf log into EXPERIMENTS.md."""
+import subprocess, sys
+from pathlib import Path
+
+doc = Path('EXPERIMENTS.md').read_text()
+table = subprocess.run([sys.executable, 'scripts/roofline_table.py'],
+                       capture_output=True, text=True).stdout
+perf = subprocess.run([sys.executable, 'scripts/perf_log.py'],
+                      capture_output=True, text=True).stdout
+doc = doc.replace('<!-- ROOFLINE_TABLE -->', table.rstrip())
+doc = doc.replace('<!-- PERF_LOG -->', perf.strip())
+Path('EXPERIMENTS.md').write_text(doc)
+print('EXPERIMENTS.md updated:', len(table.splitlines()), 'roofline rows')

@@ -1,0 +1,61 @@
+"""Emit the EXPERIMENTS.md §Perf iteration tables from artifacts."""
+import json
+from pathlib import Path
+
+BASE = Path('artifacts/dryrun')
+OPT = Path('artifacts/dryrun_opt')
+
+def load(p):
+    d = json.loads(p.read_text())
+    r = d['roofline']
+    return r
+
+def row(label, r):
+    return (f"| {label} | {r['t_compute']:.3f} | {r['t_memory']:.3f} | "
+            f"{r['t_collective']:.3f} | {r['bottleneck']} | "
+            f"{r['step_time_lower_bound']:.3f} | {r['mfu_bound']:.3f} |")
+
+CELLS = {
+    'internvl2_76b train_4k single': [
+        ('baseline (naive: fp32 gathers, after-add AR)', BASE / 'internvl2_76b__train_4k__single.json'),
+        ('it1: bf16 pre-gather cast + RS-before-add', OPT / 'internvl2_76b__train_4k__single__opt_bf16cast.json'),
+        ('it2: + fsdp_only (ZeRO-3, no TP)', OPT / 'internvl2_76b__train_4k__single__opt_fsdponly.json'),
+        ('it3: + remat=dots (fewer gather passes)', OPT / 'internvl2_76b__train_4k__single__opt_fsdp_dots.json'),
+    ],
+    'llama4_scout_17b_a16e prefill_32k multi': [
+        ('baseline (dispatch replicated over experts)', BASE / 'llama4_scout_17b_a16e__prefill_32k__multi.json'),
+        ('it1: 2D batch x expert dispatch sharding', OPT / 'llama4_scout_17b_a16e__prefill_32k__multi__opt_dispatch2d.json'),
+    ],
+    'qwen2_7b decode_32k single': [
+        ('baseline (cache batch-sharded only)', BASE / 'qwen2_7b__decode_32k__single.json'),
+        ('it1: + int8 MLC-style KV (quant only)', OPT / 'qwen2_7b__decode_32k__single__opt_kvquant_only.json'),
+        ('it2: KV seq-striping over model axis', OPT / 'qwen2_7b__decode_32k__single__opt_kvstripe.json'),
+        ('it3: striping + int8 KV', OPT / 'qwen2_7b__decode_32k__single__opt_kvquant.json'),
+    ],
+    'deepseek_moe_16b prefill_32k multi (same MoE fix)': [
+        ('baseline', BASE / 'deepseek_moe_16b__prefill_32k__multi.json'),
+        ('it1: 2D dispatch sharding', OPT / 'deepseek_moe_16b__prefill_32k__multi__opt_dispatch2d.json'),
+    ],
+}
+
+for cell, rows in CELLS.items():
+    print(f"\n### {cell}\n")
+    print("| variant | compute s | memory s | collective s | bottleneck | bound s | MFU bound |")
+    print("|---|---|---|---|---|---|---|")
+    base_bound = None
+    for label, p in rows:
+        if not p.exists():
+            print(f"| {label} | (pending) | | | | | |")
+            continue
+        r = load(p)
+        if base_bound is None:
+            base_bound = r['step_time_lower_bound']
+        print(row(label, r))
+    if base_bound:
+        existing = [p for _, p in rows if p.exists()]
+        if len(existing) > 1:
+            best = min((load(p) for p in existing),
+                       key=lambda r: r['step_time_lower_bound'])
+            print(f"\n**{base_bound / best['step_time_lower_bound']:.2f}x step-time-bound improvement "
+                  f"(best accepted variant)**, MFU bound "
+                  f"{load(existing[0])['mfu_bound']:.3f} -> {best['mfu_bound']:.3f}")

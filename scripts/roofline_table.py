@@ -1,0 +1,33 @@
+"""Emit the EXPERIMENTS.md roofline table from dry-run artifacts."""
+import json, glob, sys
+
+def fmt(v):
+    if v == 0: return "0"
+    if v < 1e-3: return f"{v*1e6:.1f}us"
+    if v < 1: return f"{v*1e3:.1f}ms"
+    return f"{v:.2f}s"
+
+rows = []
+for f in sorted(glob.glob('artifacts/dryrun/*.json')):
+    d = json.load(open(f))
+    tag = (d['arch'], d['shape'], d['mesh'])
+    if d['status'] == 'skipped':
+        rows.append((tag, None))
+        continue
+    r = d['roofline']
+    mem = d.get('memory', {})
+    hbm = (mem.get('argument_size_in_bytes', 0) + mem.get('temp_size_in_bytes', 0)
+           + mem.get('output_size_in_bytes', 0) - mem.get('alias_size_in_bytes', 0))
+    rows.append((tag, (r, hbm, d.get('compile_s'))))
+
+print('| arch | shape | mesh | compute | memory | collective | bottleneck | MODEL_FLOPs/HLO | MFU bound | bytes/dev |')
+print('|---|---|---|---|---|---|---|---|---|---|')
+for (a, s, m), v in rows:
+    if v is None:
+        print(f'| {a} | {s} | {m} | — | — | — | skip (full-attn, long_500k) | — | — | — |')
+        continue
+    r, hbm, cs = v
+    ratio = r['model_flops'] / (r['flops'] * r['chips']) if r['flops'] else 0
+    print(f"| {a} | {s} | {m} | {fmt(r['t_compute'])} | {fmt(r['t_memory'])} | "
+          f"{fmt(r['t_collective'])} | {r['bottleneck']} | {ratio:.2f} | "
+          f"{r['mfu_bound']:.3f} | {hbm/1e9:.1f}GB |")

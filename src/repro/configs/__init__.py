@@ -1,0 +1,5 @@
+from repro.configs.base import ArchConfig, get_config, list_archs, ARCH_IDS
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+
+__all__ = ["ArchConfig", "get_config", "list_archs", "ARCH_IDS",
+           "SHAPES", "ShapeSpec", "applicable"]

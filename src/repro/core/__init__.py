@@ -1,0 +1,16 @@
+"""SpecPCM core: hyperdimensional computing + PCM in-memory-compute models."""
+
+from repro.core.pipeline import (
+    SpecPCMConfig,
+    encode_and_pack,
+    imc_scores,
+    run_clustering,
+    run_db_search,
+    ClusterReport,
+    SearchReport,
+)
+
+__all__ = [
+    "SpecPCMConfig", "encode_and_pack", "imc_scores",
+    "run_clustering", "run_db_search", "ClusterReport", "SearchReport",
+]

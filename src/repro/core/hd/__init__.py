@@ -1,0 +1,34 @@
+from repro.core.hd.encoding import (
+    HDEncoderConfig,
+    make_codebooks,
+    encode_batch,
+    encode_batch_reference,
+)
+from repro.core.hd.packing import pack_dimensions, unpack_dimensions
+from repro.core.hd.similarity import (
+    dot_similarity,
+    hamming_similarity,
+    top1_search,
+    topk_search,
+)
+from repro.core.hd.clustering import (
+    pairwise_distances,
+    complete_linkage,
+    ClusteringResult,
+)
+
+__all__ = [
+    "HDEncoderConfig",
+    "make_codebooks",
+    "encode_batch",
+    "encode_batch_reference",
+    "pack_dimensions",
+    "unpack_dimensions",
+    "dot_similarity",
+    "hamming_similarity",
+    "top1_search",
+    "topk_search",
+    "pairwise_distances",
+    "complete_linkage",
+    "ClusteringResult",
+]

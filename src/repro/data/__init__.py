@@ -1,0 +1,3 @@
+from repro.data.tokens import TokenPipeline, synthetic_batch
+
+__all__ = ["TokenPipeline", "synthetic_batch"]

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for SpecPCM compute hot-spots.
+
+Each kernel directory holds:
+  <name>.py — the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py    — the jit'd public wrapper (padding, dtype plumbing)
+  ref.py    — the pure-jnp oracle used by tests and as the CPU fallback
+
+Kernels target TPU (MXU-aligned 128 tiles); on CPU they run with
+``interpret=True`` which executes the kernel body in Python for correctness.
+"""
+
+from repro.kernels.imc_mvm.ops import imc_mvm_pallas
+from repro.kernels.hd_encode.ops import hd_encode_pallas
+from repro.kernels.hamming_pop.ops import hamming_pop_pallas
+from repro.kernels.decode_attention.ops import decode_attention_pallas
+
+__all__ = ["imc_mvm_pallas", "hd_encode_pallas", "hamming_pop_pallas",
+           "decode_attention_pallas"]

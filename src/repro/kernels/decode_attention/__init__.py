@@ -1,0 +1,3 @@
+from repro.kernels.decode_attention.ops import decode_attention_pallas
+
+__all__ = ["decode_attention_pallas"]

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: one-token GQA decode attention over an int8 KV store.
+
+This is the fused kernel that EXPERIMENTS.md §Perf cell 3 identifies: the
+XLA graph version of int8-KV decode materializes the dequantized fp32 cache
+in HBM (quadrupling traffic vs bf16); here dequantization happens in VMEM
+registers between the int8 loads and the MXU dot, so HBM traffic is the
+int8 codes + scales only — the paper's MLC-read dataflow (§III.C) on TPU.
+
+Grid: (B, KV). Each program owns one (batch, kv-head) pair: q (G, hd) stays
+resident; K8/V8 stream through VMEM in S-chunks with online softmax
+(m, denom, acc) carried across chunks in fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, len_ref, o_ref,
+                        *, seq_len: int, chunk: int):
+    g, hd = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
+    valid = len_ref[0, 0]
+
+    def body(c, carry):
+        m, denom, acc = carry
+        s0 = c * chunk
+        k8 = k_ref[0, pl.dslice(s0, chunk), 0, :].astype(jnp.float32)  # (C,hd)
+        ks = ks_ref[0, pl.dslice(s0, chunk), 0].astype(jnp.float32)    # (C,)
+        logits = jax.lax.dot_general(
+            q, k8, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (G, C)
+        logits = logits * ks[None, :]
+        pos = s0 + jax.lax.iota(jnp.int32, chunk)
+        logits = jnp.where((pos < valid)[None, :], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        denom = denom * corr + p.sum(-1)
+        v8 = v_ref[0, pl.dslice(s0, chunk), 0, :].astype(jnp.float32)
+        vs = vs_ref[0, pl.dslice(s0, chunk), 0].astype(jnp.float32)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p * vs[None, :], v8, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, denom, acc
+
+    m0 = jnp.full((g,), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((g,), jnp.float32)
+    a0 = jnp.zeros((g, hd), jnp.float32)
+    m, denom, acc = jax.lax.fori_loop(0, seq_len // chunk, body, (m0, d0, a0))
+    o_ref[0, 0] = acc / jnp.maximum(denom[:, None], 1e-30)
+
+
+def decode_attention_pallas_call(
+    q: jax.Array,        # (B, KV, G, hd) f32
+    k8: jax.Array,       # (B, S, KV, hd) int8
+    v8: jax.Array,       # (B, S, KV, hd) int8
+    k_scale: jax.Array,  # (B, S, KV) f32
+    v_scale: jax.Array,  # (B, S, KV) f32
+    valid_len: jax.Array,  # (1, 1) int32
+    *,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kv, g, hd = q.shape
+    s = k8.shape[1]
+    assert s % chunk == 0, (s, chunk)
+    kernel = functools.partial(_decode_attn_kernel, seq_len=s, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, s, 1, hd), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, s, 1, hd), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, s, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, s, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), jnp.float32),
+        interpret=interpret,
+    )(q, k8, v8, k_scale, v_scale, valid_len)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for fused int8-KV decode attention.
+
+Dequantization algebra (exact): logits_s = (q . k8_s) * kscale_s;
+out = sum_s softmax(logits)_s * vscale_s * v8_s.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,        # (B, KV, G, hd) f32 (already rope'd + scaled)
+    k8: jnp.ndarray,       # (B, S, KV, hd) int8
+    v8: jnp.ndarray,       # (B, S, KV, hd) int8
+    k_scale: jnp.ndarray,  # (B, S, KV) f32
+    v_scale: jnp.ndarray,  # (B, S, KV) f32
+    valid_len: jnp.ndarray,  # () int32 — positions < valid_len attend
+) -> jnp.ndarray:
+    logits = jnp.einsum("bngk,bsnk->bngs", q.astype(jnp.float32),
+                        k8.astype(jnp.float32))
+    logits = logits * k_scale.transpose(0, 2, 1)[:, :, None, :]
+    s = k8.shape[1]
+    mask = jnp.arange(s) < valid_len
+    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = w * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    return jnp.einsum("bngs,bsnk->bngk", w, v8.astype(jnp.float32))

@@ -1,0 +1,3 @@
+from repro.kernels.hamming_pop.ops import hamming_pop_pallas
+
+__all__ = ["hamming_pop_pallas"]

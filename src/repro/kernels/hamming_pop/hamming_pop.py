@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: bit-packed SLC Hamming similarity (beyond-paper).
+
+The paper's SLC mode stores one bipolar dim per cell; on TPU the natural
+equivalent packs 32 dims per uint32 lane and computes
+``dim - popcount(q XOR r)`` with the vector unit — a 32x reduction in memory
+traffic vs int8 HVs. Each program instance owns a (bq, br) output block and
+loops over word-chunks so the (bq, br, wchunk) XOR intermediate stays inside
+VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(q_ref, r_ref, o_ref, *, dim: int, n_words: int,
+                    word_chunk: int):
+    bq = q_ref.shape[0]
+    br = r_ref.shape[0]
+
+    def body(c, acc):
+        w0 = c * word_chunk
+        qc = q_ref[:, pl.dslice(w0, word_chunk)]   # (bq, wc) uint32
+        rc = r_ref[:, pl.dslice(w0, word_chunk)]   # (br, wc)
+        x = qc[:, None, :] ^ rc[None, :, :]        # (bq, br, wc)
+        pc = jax.lax.population_count(x).astype(jnp.int32)
+        return acc + pc.sum(axis=-1)
+
+    nchunks = n_words // word_chunk
+    acc = jnp.zeros((bq, br), jnp.int32)
+    acc = jax.lax.fori_loop(0, nchunks, body, acc)
+    o_ref[...] = dim - acc
+
+
+def hamming_pop_pallas_call(
+    q_packed: jax.Array,   # (Q, W) uint32
+    r_packed: jax.Array,   # (R, W) uint32
+    *,
+    dim: int,
+    block_q: int = 128,
+    block_r: int = 128,
+    word_chunk: int = 32,
+    interpret: bool = False,
+) -> jax.Array:
+    Q, W = q_packed.shape
+    R = r_packed.shape[0]
+    assert Q % block_q == 0 and R % block_r == 0 and W % word_chunk == 0
+
+    kernel = functools.partial(
+        _hamming_kernel, dim=dim, n_words=W, word_chunk=word_chunk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // block_q, R // block_r),
+        in_specs=[
+            pl.BlockSpec((block_q, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_r), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, R), jnp.int32),
+        interpret=interpret,
+    )(q_packed, r_packed)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for bit-packed Hamming similarity."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hamming_pop_ref(q_packed: jnp.ndarray, r_packed: jnp.ndarray, dim: int
+                    ) -> jnp.ndarray:
+    """(Q, W) uint32 x (R, W) uint32 -> (Q, R) int32 similarity =
+    dim - popcount(q ^ r) (number of agreeing bipolar positions)."""
+    x = q_packed[:, None, :] ^ r_packed[None, :, :]
+    dist = jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+    return dim - dist

@@ -1,0 +1,3 @@
+from repro.kernels.hd_encode.ops import hd_encode_pallas
+
+__all__ = ["hd_encode_pallas"]

@@ -1,0 +1,49 @@
+"""Public jit'd wrapper for the HD encoding Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hd_encode.hd_encode import hd_encode_pallas_call
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_d", "block_f", "interpret"))
+def hd_encode_pallas(
+    levels: jax.Array,
+    id_hvs: jax.Array,
+    level_hvs: jax.Array,
+    *,
+    block_b: int = 8,
+    block_d: int = 256,
+    block_f: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(B, F) levels + codebooks -> (B, D) bipolar int8 HVs.
+
+    Pads B/F/D to block multiples. F-padding uses level 0 (absent) so padded
+    features are inert; D-padding is sliced off; B-padding is sliced off.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, F = levels.shape
+    m, D = level_hvs.shape
+    pb, pf, pd = (-B) % block_b, (-F) % block_f, (-D) % block_d
+    if pb or pf:
+        levels = jnp.pad(levels, ((0, pb), (0, pf)))
+    if pf or pd:
+        id_hvs = jnp.pad(id_hvs, ((0, pf), (0, pd)))
+    if pd:
+        level_hvs = jnp.pad(level_hvs, ((0, 0), (0, pd)))
+    out = hd_encode_pallas_call(
+        levels.astype(jnp.int32), id_hvs, level_hvs,
+        block_b=block_b, block_d=block_d, block_f=block_f,
+        interpret=interpret,
+    )
+    return out[:B, :D]

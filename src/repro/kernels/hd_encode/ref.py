@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the ID-level HD encoding kernel (Eq. 1).
+
+Level 0 is the 'absent peak' sentinel and contributes nothing; sign ties
+(acc == 0) resolve to -1, matching the paper's sign convention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hd_encode_ref(
+    levels: jnp.ndarray,     # (B, F) int32 quantized intensity levels
+    id_hvs: jnp.ndarray,     # (F, D) int8 bipolar
+    level_hvs: jnp.ndarray,  # (m, D) int8 bipolar
+) -> jnp.ndarray:
+    lv = level_hvs[levels]                       # (B, F, D)
+    present = (levels > 0).astype(jnp.int32)     # (B, F)
+    acc = jnp.einsum(
+        "bf,bfd,fd->bd",
+        present, lv.astype(jnp.int32), id_hvs.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return jnp.where(acc > 0, jnp.int8(1), jnp.int8(-1))

@@ -1,0 +1,3 @@
+from repro.kernels.imc_mvm.ops import imc_mvm_pallas
+
+__all__ = ["imc_mvm_pallas"]

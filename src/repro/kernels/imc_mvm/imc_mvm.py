@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the SpecPCM analog IMC MVM.
+
+Hardware mapping (DESIGN.md §2): one 128x128 PCM array == one 128x128 MXU
+tile. The kernel streams K in 128-wide tiles (one "array stripe" per tile),
+computes the tile partial sum on the MXU, applies the flash-ADC transfer
+function (clamp + uniform quantization) to the *partial* sum — the defining
+non-ideality of the paper's dataflow — and accumulates quantized partials in
+an fp32 VMEM scratch accumulator.
+
+Grid: (Q/bq, R/br). Each program instance owns a (bq, br) output block and
+loops over all K tiles, so weight blocks are read once per (q-block) pass —
+the same reuse the physical array gets by keeping references resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _imc_mvm_kernel(
+    q_ref, w_ref, o_ref, *,
+    n_tiles: int,
+    tile_cols: int,
+    dac_limit: float,
+    adc_levels: int,
+    full_scale: float,
+):
+    bq = q_ref.shape[0]
+    br = w_ref.shape[0]
+    lsb = full_scale / adc_levels
+
+    def tile_body(t, acc):
+        qt = q_ref[:, pl.dslice(t * tile_cols, tile_cols)]
+        wt = w_ref[:, pl.dslice(t * tile_cols, tile_cols)]
+        # DAC: clamp+round the packed query levels
+        qt = jnp.clip(jnp.round(qt), -dac_limit, dac_limit)
+        # analog tile partial sum (MXU)
+        part = jax.lax.dot_general(
+            qt, wt,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        # flash ADC on the partial sum
+        code = jnp.clip(jnp.round(part / lsb), -adc_levels, adc_levels)
+        return acc + code * lsb
+
+    acc = jnp.zeros((bq, br), jnp.float32)
+    acc = jax.lax.fori_loop(0, n_tiles, tile_body, acc)
+    o_ref[...] = acc
+
+
+def imc_mvm_pallas_call(
+    queries: jax.Array,   # (Q, Dp) float32, Dp % tile_cols == 0
+    weights: jax.Array,   # (R, Dp) float32
+    *,
+    block_q: int = 128,
+    block_r: int = 128,
+    tile_cols: int = 128,
+    dac_limit: int = 3,
+    adc_levels: int = 31,
+    full_scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    Q, Dp = queries.shape
+    R = weights.shape[0]
+    assert Q % block_q == 0 and R % block_r == 0 and Dp % tile_cols == 0
+    n_tiles = Dp // tile_cols
+
+    kernel = functools.partial(
+        _imc_mvm_kernel,
+        n_tiles=n_tiles,
+        tile_cols=tile_cols,
+        dac_limit=float(dac_limit),
+        adc_levels=adc_levels,
+        full_scale=full_scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // block_q, R // block_r),
+        in_specs=[
+            pl.BlockSpec((block_q, Dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, Dp), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_r), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, R), jnp.float32),
+        interpret=interpret,
+    )(queries, weights)

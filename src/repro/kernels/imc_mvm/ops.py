@@ -1,0 +1,61 @@
+"""Public jit'd wrapper for the IMC MVM Pallas kernel.
+
+Handles padding to MXU-aligned blocks, backend selection (interpret mode on
+CPU), and defaulting the ADC full scale from the array config formula."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.imc_mvm.imc_mvm import imc_mvm_pallas_call
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_q", "block_r", "tile_cols", "dac_limit", "adc_levels",
+        "full_scale", "interpret",
+    ),
+)
+def imc_mvm_pallas(
+    queries: jax.Array,
+    weights: jax.Array,
+    *,
+    full_scale: float,
+    block_q: int = 128,
+    block_r: int = 128,
+    tile_cols: int = 128,
+    dac_limit: int = 3,
+    adc_levels: int = 31,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(Q, Dp) x (R, Dp) -> (Q, R) through the modeled analog IMC chain.
+
+    Arbitrary Q/R/Dp are zero-padded to block multiples; zero tiles quantize
+    to zero codes so padding does not perturb results.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    q = queries.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    Q, Dp = q.shape
+    R = w.shape[0]
+    pq, pr, pd = (-Q) % block_q, (-R) % block_r, (-Dp) % tile_cols
+    if pq or pd:
+        q = jnp.pad(q, ((0, pq), (0, pd)))
+    if pr or pd:
+        w = jnp.pad(w, ((0, pr), (0, pd)))
+    out = imc_mvm_pallas_call(
+        q, w,
+        block_q=block_q, block_r=block_r, tile_cols=tile_cols,
+        dac_limit=dac_limit, adc_levels=adc_levels, full_scale=full_scale,
+        interpret=interpret,
+    )
+    return out[:Q, :R]

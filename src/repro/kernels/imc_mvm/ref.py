@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the IMC MVM kernel.
+
+Models the SpecPCM analog chain exactly as `repro.core.imc.array`:
+DAC-clamped query x noisy packed weights, per-128-column-tile partial sums,
+flash-ADC clamp+quantize of each partial, digital accumulation of quantized
+partials. The Pallas kernel must match this bit-for-bit in fp32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def imc_mvm_ref(
+    queries: jnp.ndarray,   # (Q, Dp) float32 (already packed levels)
+    weights: jnp.ndarray,   # (R, Dp) float32 (noisy conductance domain)
+    *,
+    tile_cols: int = 128,
+    dac_limit: int = 3,
+    adc_levels: int = 31,
+    full_scale: float,
+) -> jnp.ndarray:
+    q = jnp.clip(jnp.round(queries.astype(jnp.float32)), -dac_limit, dac_limit)
+    w = weights.astype(jnp.float32)
+    Q, Dp = q.shape
+    R = w.shape[0]
+    pad = (-Dp) % tile_cols
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        Dp += pad
+    t = Dp // tile_cols
+    qt = q.reshape(Q, t, tile_cols)
+    wt = w.reshape(R, t, tile_cols)
+    part = jnp.einsum("qtc,rtc->qrt", qt, wt, preferred_element_type=jnp.float32)
+    lsb = full_scale / adc_levels
+    code = jnp.clip(jnp.round(part / lsb), -adc_levels, adc_levels)
+    return (code * lsb).sum(axis=-1)

@@ -1,0 +1,382 @@
+"""Roofline-term derivation from AOT-compiled artifacts.
+
+Three terms per (arch, shape, mesh) — all in seconds, per step, per chip:
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+already per-partition on SPMD — we detect and normalize). collective_bytes
+is parsed from the partitioned HLO text: the summed operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants (TPU v5e-class, per chip):
+  197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s/link / chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  bf16[16,4096,512]{2,1,0}
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|u4|s8|u8|"
+                       r"s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+# instruction definition:  %name = <result types> opname(<operands>), ...
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$", re.M)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _all_shape_bytes(s: str) -> int:
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(s))
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*\{\s*$")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_FIRST_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum collective operand bytes per kind across the whole program
+    EXECUTION, i.e. collectives inside while-loop (lax.scan) bodies are
+    multiplied by the loop trip count (read from the loop condition's
+    integer constant), recursively for nested scans.
+
+    The HLO printer usually omits inline operand types, so a symbol table
+    (instruction name -> result bytes) resolves operands. Async
+    '-start'/'-done' pairs count once (at -start).
+    """
+    comps = _split_computations(hlo_text)
+
+    # global symbol table (instruction names are unique across computations)
+    sizes: dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        name, result_types, _, _ = m.groups()
+        sizes[name] = _all_shape_bytes(result_types)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, ())
+                  for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    def comp_bytes(name: str, seen: frozenset) -> dict[str, int]:
+        out = {k: 0 for k in _COLLECTIVES}
+        if name in seen:
+            return out
+        for line in comps.get(name, ()):
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            _, _, opname, rest = dm.groups()
+            base = opname
+            for suffix in ("-start", "-done"):
+                if base.endswith(suffix):
+                    base = base[: -len(suffix)]
+            if base in _COLLECTIVES and not opname.endswith("-done"):
+                operand_str = rest.split(")")[0]
+                total = _all_shape_bytes(operand_str)
+                if total == 0:
+                    for tok in operand_str.split(","):
+                        tok = tok.strip().lstrip("%")
+                        total += sizes.get(tok, 0)
+                out[base] += total
+            elif base == "while":
+                wm = _WHILE_ATTR_RE.search(line)
+                if wm:
+                    cond, body = wm.groups()
+                    trips = trip_count(cond)
+                    inner = comp_bytes(body, seen | {name})
+                    for k, v in inner.items():
+                        out[k] += trips * v
+        return out
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: flat sum
+        flat = {k: 0 for k in _COLLECTIVES}
+        for name in comps:
+            for k, v in comp_bytes(name, frozenset({"__flat__"})).items():
+                flat[k] += v
+        return flat
+    return comp_bytes(entry, frozenset())
+
+
+def exec_cost(hlo_text: str) -> tuple[float, float]:
+    """Execution-weighted (flops, hbm_bytes) from scheduled HLO text.
+
+    ``compiled.cost_analysis()`` counts each while-loop body ONCE, so for a
+    scan-over-layers program it underreports flops/bytes by ~num_layers.
+    This walks the computation call graph (while bodies x trip count,
+    fusion/call/to_apply x1) and:
+      * flops: every `dot` = 2 * prod(result dims) * prod(contracted lhs
+        dims) (convolutions are not used by this framework);
+      * bytes: per scheduled instruction, operand + result bytes (the
+        module is post-fusion, so an instruction ~= one kernel and its
+        operands/results ~= its HBM traffic), skipping shape-only ops.
+    """
+    comps = _split_computations(hlo_text)
+    shapes: dict[str, tuple[str, list[int]]] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        name, result_types, _, _ = m.groups()
+        sm = _SHAPE_RE.search(result_types)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d.strip()]
+            shapes[name] = (sm.group(1), dims)
+
+    def nbytes(name: str) -> int:
+        if name not in shapes:
+            return 0
+        dt, dims = shapes[name]
+        n = 1
+        for d in dims:
+            n *= d
+        return n * _DTYPE_BYTES[dt]
+
+    def trip_count(cond: str) -> int:
+        consts = [int(c) for line in comps.get(cond, ())
+                  for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    _SKIP = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "copy", "after-all", "partition-id", "iota", "while", "call",
+             "conditional"}
+    memo: dict[tuple[str, bool], tuple[float, float]] = {}
+
+    def comp_cost(name: str, stack: frozenset, count_bytes: bool = True
+                  ) -> tuple[float, float]:
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        if name in stack:
+            return (0.0, 0.0)
+        flops = 0.0
+        byts = 0.0
+        for line in comps.get(name, ()):
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            iname, result_types, opname, rest = dm.groups()
+            base = opname
+            if base == "while":
+                wm = _WHILE_ATTR_RE.search(line)
+                if wm:
+                    cond, body = wm.groups()
+                    t = trip_count(cond)
+                    f, b = comp_cost(body, stack | {name}, count_bytes)
+                    fc, bc = comp_cost(cond, stack | {name}, count_bytes)
+                    flops += t * (f + fc)
+                    byts += t * (b + bc)
+                continue
+            if base in ("call", "conditional"):
+                for cm in _CALLS_RE.finditer(line):
+                    f, b = comp_cost(cm.group(1), stack | {name}, count_bytes)
+                    flops += f
+                    byts += b
+            fusion_callees = []
+            if base in ("fusion", "custom-call", "reduce", "sort",
+                        "scatter", "map", "select-and-scatter"):
+                # fused-computation internals live in registers: count only
+                # their dots (flops); bytes come from the fusion op itself
+                for cm in _CALLS_RE.finditer(line):
+                    fusion_callees.append(cm.group(1))
+                    f, _ = comp_cost(cm.group(1), stack | {name}, False)
+                    flops += f
+            if base == "dot":
+                res_elems = 1
+                sm = _SHAPE_RE.search(result_types)
+                if sm:
+                    for d in sm.group(2).split(","):
+                        if d.strip():
+                            res_elems *= int(d)
+                k = 1
+                cm = _LHS_CONTRACT_RE.search(line)
+                op0 = _FIRST_OPERAND_RE.search(rest)
+                if cm and op0 and op0.group(1) in shapes:
+                    _, lhs_dims = shapes[op0.group(1)]
+                    for idx in cm.group(1).split(","):
+                        if idx.strip() and int(idx) < len(lhs_dims):
+                            k *= lhs_dims[int(idx)]
+                flops += 2.0 * res_elems * k
+            if count_bytes and base not in _SKIP:
+                res_bytes = _all_shape_bytes(result_types)
+                operand_str = rest.split(")")[0]
+                op_bytes = []
+                inline = _all_shape_bytes(operand_str)
+                if inline:
+                    op_bytes = [inline]
+                else:
+                    op_bytes = [nbytes(tok.strip().lstrip("%"))
+                                for tok in operand_str.split(",")]
+                # in-place dynamic-update-slice (bare or fused): traffic is
+                # the UPDATE region (write + read), not the whole — possibly
+                # scan-carried, 100s-of-GB — buffer; likewise dynamic-slice
+                # reads only the slice. Without this, a KV-cache write or a
+                # stacked-gradient accumulation charges the full buffer once
+                # per layer.
+                callee_text = " ".join(
+                    l for c in fusion_callees for l in comps.get(c, ()))
+                is_dus = (base == "dynamic-update-slice"
+                          or "dynamic-update-slice" in callee_text)
+                is_ds = (base == "dynamic-slice"
+                         or re.search(r"\bdynamic-slice\(", callee_text))
+                if is_dus and res_bytes in op_bytes:
+                    rest_ops = sorted(op_bytes)
+                    rest_ops.remove(res_bytes)
+                    byts += 2 * sum(b for b in rest_ops)
+                    continue
+                if is_ds and op_bytes and max(op_bytes) > 4 * max(res_bytes, 1):
+                    byts += 2 * res_bytes + (sum(op_bytes) - max(op_bytes))
+                    continue
+                byts += res_bytes + sum(op_bytes)
+        memo[key] = (flops, byts)
+        return memo[key]
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        return (0.0, 0.0)
+    return comp_cost(entry, frozenset())
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float              # per-chip FLOPs per step
+    hbm_bytes: float          # per-chip HBM traffic per step
+    coll_bytes: float         # per-chip collective bytes per step
+    coll_breakdown: dict[str, int]
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float = 0.0  # 6*N*D useful flops (whole job)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline-limited step time."""
+        if self.model_flops <= 0 or self.step_time_lower_bound <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.step_time_lower_bound
+                / PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self) | {
+            "step_time_lower_bound": self.step_time_lower_bound,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int, model_flops: float = 0.0
+                           ) -> RooflineReport:
+    # NOTE: compiled.cost_analysis() counts while-loop (lax.scan) bodies
+    # once, underreporting a scanned L-layer model ~L-fold. exec_cost walks
+    # the partitioned HLO with trip-count expansion instead; the module is
+    # per-device so all terms are already /chip.
+    text = compiled.as_text()
+    flops, hbm = exec_cost(text)
+    coll = collective_bytes(text)
+    cbytes = float(sum(coll.values()))
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = cbytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineReport(
+        flops=flops, hbm_bytes=hbm, coll_bytes=cbytes, coll_breakdown=coll,
+        chips=chips, t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck, model_flops=model_flops,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 * N_active * D_tokens (dense) per step; decode counts
+    one token per sequence."""
+    # active params per token
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    attn = d * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd \
+        + cfg.num_heads * hd * d
+    if cfg.is_moe:
+        ffn_active = 3 * d * cfg.expert_d_ff * (cfg.top_k + cfg.num_shared_experts)
+    elif cfg.family == "ssm":
+        d_inner = 2 * d
+        attn = 0
+        ffn_active = d * 2 * d_inner + 3 * d_inner * (d_inner // max(cfg.num_heads, 1)) \
+            + d_inner * d
+    else:
+        nmat = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        ffn_active = nmat * d * cfg.d_ff
+    if cfg.family == "hybrid":
+        ffn_active += d * 2 * d + 2 * d * cfg.ssm_state + d * d
+    n_active = cfg.num_layers * (attn + ffn_active)
+    n_active += cfg.padded_vocab * d  # embedding/unembed (once)
+    if cfg.is_encoder_decoder:
+        n_active += cfg.num_encoder_layers * (attn + ffn_active)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,554 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full/chunked/
+decode), FFN variants (SwiGLU/GeGLU/GELU, optional IMC-routed down-proj),
+and GShard-style MoE with capacity-factor dispatch.
+
+All layers are pure functions over explicit param pytrees. Init functions
+return ``(params, axes)`` where ``axes`` mirrors ``params`` with tuples of
+logical axis names consumed by ``repro.dist.sharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import baseline_mode, constrain
+
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, d: int | None = None) -> tuple[Params, Params]:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        p = {"scale": jnp.ones((d,), jnp.float32),
+             "bias": jnp.zeros((d,), jnp.float32)}
+        a = {"scale": (None,), "bias": (None,)}
+    else:
+        p = {"scale": jnp.ones((d,), jnp.float32)}
+        a = {"scale": (None,)}
+    return p, a
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ArchConfig) -> tuple[Params, Params]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, h, hd), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, kv, hd), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, kv, hd), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (h, hd, d), jnp.float32) * (h * hd) ** -0.5,
+    }
+    a = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kv, hd), jnp.float32)
+        a["bq"] = ("heads", None)
+        a["bk"] = ("kv_heads", None)
+        a["bv"] = ("kv_heads", None)
+    return p, a
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ArchConfig, positions: jax.Array,
+         use_rope: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _group_q(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, KV, G, hd): group query heads by kv head so
+    GQA/MQA attention never materializes repeated K/V (a 7-48x temp blowup
+    for qwen/granite otherwise)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, hd)
+
+
+def _causal_band_mask(sq: int, skv: int, q_off: jax.Array | int,
+                      window: int) -> jax.Array:
+    """(sq, skv) bool mask: kv position j visible from query position
+    (q_off + i) if j <= q_off+i and (window == 0 or j > q_off+i - window)."""
+    qi = jnp.arange(sq)[:, None] + q_off
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window:
+        m = m & (kj > qi - window)
+    return m
+
+
+def attention_full(q, k, v, cfg: ArchConfig, q_off=0, causal=True) -> jax.Array:
+    """Materialized-scores attention — used when seq is small."""
+    hd = q.shape[-1]
+    b, sq, h, _ = q.shape
+    kv = k.shape[2]
+    qg = _group_q(q, kv)
+    logits = jnp.einsum("bqngk,bsnk->bngqs", qg, k) / (hd ** 0.5)
+    if causal:
+        mask = _causal_band_mask(sq, k.shape[1], q_off, cfg.sliding_window)
+        logits = jnp.where(mask[None, None, None], logits.astype(jnp.float32),
+                           -1e30)
+    else:
+        logits = logits.astype(jnp.float32)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngqs,bsnk->bqngk", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention_chunked(q, k, v, cfg: ArchConfig, chunk: int = 1024,
+                      causal=True) -> jax.Array:
+    """Online-softmax attention over KV chunks (jnp-level FlashAttention).
+
+    Memory is O(S_q * chunk) instead of O(S_q * S_kv): the kernel-free TPU
+    adaptation for 32k prefill. Scans over KV chunks carrying the running
+    (max, denominator, weighted-sum) triple.
+    """
+    h = cfg.num_heads
+    hd = q.shape[-1]
+    b, sq = q.shape[0], q.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    skv = k.shape[1]
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    nch = skv // chunk
+    kc = k.reshape(b, nch, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nch, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    qg = _group_q(q, kv).astype(jnp.float32)   # (b, sq, kv, g, hd)
+    scale = hd ** -0.5
+
+    def body(carry, xs):
+        m, denom, acc = carry                  # (b,kv,g,sq), ..., (b,kv,g,sq,hd)
+        ci, kb, vb = xs
+        logits = jnp.einsum("bqngk,bsnk->bngqs", qg,
+                            kb.astype(jnp.float32)) * scale
+        kj = ci * chunk + jnp.arange(chunk)[None, :]
+        qi = jnp.arange(sq)[:, None]
+        mask = kj <= qi
+        if cfg.sliding_window:
+            mask = mask & (kj > qi - cfg.sliding_window)
+        if not causal:
+            mask = jnp.ones_like(mask)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        denom = denom * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bngqs,bsnk->bngqk", p, vb.astype(jnp.float32))
+        return (m_new, denom, acc), None
+
+    m0 = jnp.full((b, kv, g, sq), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    (m, denom, acc), _ = jax.lax.scan(
+        body, (m0, d0, a0), (jnp.arange(nch), kc, vc))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    # (b, kv, g, sq, hd) -> (b, sq, h, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention_train(p: Params, x: jax.Array, cfg: ArchConfig,
+                    causal: bool = True, chunk_threshold: int = 8192
+                    ) -> jax.Array:
+    """Self-attention over a full sequence (training / encoder)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    if s <= chunk_threshold:
+        out = attention_full(q, k, v, cfg, causal=causal)
+    else:
+        out = attention_chunked(q, k, v, cfg, causal=causal)
+    out = constrain(out, "batch", None, "heads", None)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+
+
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array  # (B, S_max, KV, hd)
+    v: jax.Array
+
+jax.tree_util.register_dataclass(KVCache, data_fields=["k", "v"], meta_fields=[])
+
+
+@dataclasses.dataclass
+class QuantKVCache:
+    """int8 KV store with per-(batch, position, kv-head) scales — the
+    SpecPCM MLC insight (quantized memory-resident store, §DESIGN.md
+    Insight 2) applied to the KV cache: 2x less HBM traffic per decode
+    step, with scales factoring out of the QK dot product per position."""
+    k: jax.Array        # (B, S, KV, hd) int8
+    v: jax.Array        # (B, S, KV, hd) int8
+    k_scale: jax.Array  # (B, S, KV) f32
+    v_scale: jax.Array  # (B, S, KV) f32
+
+jax.tree_util.register_dataclass(
+    QuantKVCache, data_fields=["k", "v", "k_scale", "v_scale"],
+    meta_fields=[])
+
+
+def _kv_quant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, S, KV, hd) -> int8 codes + per-(B,S,KV) scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(xf).max(-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=None):
+    """For sliding-window layers the cache is bounded by the window."""
+    size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if getattr(cfg, "kv_quant_int8", False):
+        z = jnp.zeros((batch, size, kv, hd), jnp.int8)
+        s = jnp.ones((batch, size, kv), jnp.float32)
+        return QuantKVCache(k=z, v=z, k_scale=s, v_scale=s)
+    dt = dtype or _dtype(cfg)
+    z = jnp.zeros((batch, size, kv, hd), dt)
+    return KVCache(k=z, v=z)
+
+
+def attention_prefill(p: Params, x: jax.Array, cfg: ArchConfig, cache
+                      ) -> tuple[jax.Array, "KVCache | QuantKVCache"]:
+    """Training-shape attention that also materializes the KV cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    if s <= 8192:
+        out = attention_full(q, k, v, cfg)
+    else:
+        out = attention_chunked(q, k, v, cfg)
+    size = cache.k.shape[1]
+    if isinstance(cache, QuantKVCache):
+        k8, ks = _kv_quant(k[:, -size:])
+        v8, vs = _kv_quant(v[:, -size:])
+        cache = QuantKVCache(
+            k=jax.lax.dynamic_update_slice_in_dim(cache.k, k8, 0, axis=1),
+            v=jax.lax.dynamic_update_slice_in_dim(cache.v, v8, 0, axis=1),
+            k_scale=jax.lax.dynamic_update_slice_in_dim(
+                cache.k_scale, ks, 0, axis=1),
+            v_scale=jax.lax.dynamic_update_slice_in_dim(
+                cache.v_scale, vs, 0, axis=1),
+        )
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k[:, -size:], 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v[:, -size:], 0, axis=1)
+        cache = KVCache(k=kc, v=vc)
+    out = constrain(out, "batch", None, "heads", None)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+    return y, cache
+
+
+def attention_decode(p: Params, x: jax.Array, cfg: ArchConfig,
+                     cache, pos: jax.Array
+                     ) -> tuple[jax.Array, "KVCache | QuantKVCache"]:
+    """One-token decode against the KV cache.
+
+    x: (B, 1, D); pos: () int32 — absolute position of the new token.
+    Sliding-window layers use the cache as a ring buffer of size `window`.
+    With a QuantKVCache the QK dot runs against int8 codes and the
+    per-position scale multiplies the logits afterwards (exact algebra).
+    """
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    size = cache.k.shape[1]
+    slot = pos % size if cfg.sliding_window else pos
+    quant = isinstance(cache, QuantKVCache)
+    if quant:
+        k8, ks = _kv_quant(k)
+        v8, vs = _kv_quant(v)
+        cache = QuantKVCache(
+            k=jax.lax.dynamic_update_slice(cache.k, k8, (0, slot, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache.v, v8, (0, slot, 0, 0)),
+            k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks,
+                                                 (0, slot, 0)),
+            v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs,
+                                                 (0, slot, 0)),
+        )
+        kc, vc = cache.k, cache.v
+    else:
+        kc = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        cache = KVCache(k=kc, v=vc)
+    qg = _group_q(q, kv)                                    # (b,1,kv,g,hd)
+    logits = jnp.einsum("bqngk,bsnk->bngqs", qg.astype(jnp.float32),
+                        kc.astype(jnp.float32)) / (hd ** 0.5)
+    if quant:
+        # scale (b,s,n) -> (b,n,1,1,s)
+        logits = logits * cache.k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    idx = jnp.arange(size)
+    if cfg.sliding_window:
+        valid = (idx <= slot) | (pos >= size)   # ring buffer fully valid once wrapped
+    else:
+        valid = idx <= pos
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    if quant:
+        w = w * cache.v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    w = w.astype(jnp.float32)
+    out = jnp.einsum("bngqs,bsnk->bqngk", w, vc.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense)
+# ---------------------------------------------------------------------------
+
+def init_ffn(key: jax.Array, cfg: ArchConfig, d_ff: int | None = None
+             ) -> tuple[Params, Params]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    if cfg.activation in ("swiglu", "geglu"):
+        p = {
+            "w_gate": jax.random.normal(k1, (d, f), jnp.float32) * s_in,
+            "w_up": jax.random.normal(k2, (d, f), jnp.float32) * s_in,
+            "w_down": jax.random.normal(k3, (f, d), jnp.float32) * s_out,
+        }
+        a = {"w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"),
+             "w_down": ("ff", "fsdp")}
+    else:
+        p = {
+            "w_up": jax.random.normal(k1, (d, f), jnp.float32) * s_in,
+            "w_down": jax.random.normal(k3, (f, d), jnp.float32) * s_out,
+            "b_up": jnp.zeros((f,), jnp.float32),
+            "b_down": jnp.zeros((d,), jnp.float32),
+        }
+        a = {"w_up": ("fsdp", "ff"), "w_down": ("ff", "fsdp"),
+             "b_up": ("ff",), "b_down": (None,)}
+    return p, a
+
+
+def _imc_linear(x: jax.Array, w: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Route a matmul through the SpecPCM analog-chain model (DESIGN.md §3).
+
+    Forward numerics: symmetric int quantization of activations to the DAC
+    range and weights to the MLC range, per-128-column-tile partial sums,
+    ADC clamp+quantize of partials, dequantized accumulation. Gradients use
+    a straight-through estimator around the exact matmul.
+    """
+    from repro.core.imc.array import ArrayConfig, default_full_scale
+
+    acfg = ArrayConfig(adc_bits=cfg.imc_adc_bits, bits_per_cell=cfg.imc_mlc_bits)
+    dac = acfg.dac_levels
+    mlc = cfg.imc_mlc_bits
+    xf, wf = x.astype(jnp.float32), w.astype(jnp.float32)
+    sx = jnp.maximum(jnp.abs(xf).max(-1, keepdims=True), 1e-6) / dac
+    sw = jnp.maximum(jnp.abs(wf).max(0, keepdims=True), 1e-6) / mlc
+    xq = jnp.round(xf / sx)
+    wq = jnp.round(wf / sw)
+    F = wq.shape[0]
+    pad = (-F) % 128
+    if pad:
+        xq = jnp.pad(xq, [(0, 0)] * (xq.ndim - 1) + [(0, pad)])
+        wq = jnp.pad(wq, ((0, pad), (0, 0)))
+    t = xq.shape[-1] // 128
+    xt = xq.reshape(*xq.shape[:-1], t, 128)
+    wt = wq.reshape(t, 128, wq.shape[-1])
+    part = jnp.einsum("...tc,tcd->...td", xt, wt)
+    fs = default_full_scale(acfg)
+    lsb = fs / acfg.adc_levels
+    code = jnp.clip(jnp.round(part / lsb), -acfg.adc_levels, acfg.adc_levels)
+    y_imc = (code * lsb).sum(-2) * sx * sw
+    y_exact = xf @ wf
+    # straight-through: value = imc, gradient = exact
+    y = y_exact + jax.lax.stop_gradient(y_imc - y_exact)
+    return y.astype(x.dtype)
+
+
+def apply_ffn(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.activation in ("swiglu", "geglu"):
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        act = jax.nn.silu(g) if cfg.activation == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+    h = constrain(h, "batch", None, "ff")
+    if cfg.imc_linear:
+        y = _imc_linear(h, p["w_down"], cfg)
+    else:
+        y = h @ p["w_down"].astype(dt)
+    if "b_down" in p:
+        y = y + p["b_down"].astype(dt)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard-style capacity dispatch + shared experts)
+# ---------------------------------------------------------------------------
+
+def init_moe(key: jax.Array, cfg: ArchConfig) -> tuple[Params, Params]:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(k2, (e, d, f), jnp.float32) * s_in,
+        "w_up": jax.random.normal(k3, (e, d, f), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k4, (e, f, d), jnp.float32) * s_out,
+    }
+    a = {
+        "router": (None, None),
+        "w_gate": ("experts", "fsdp", None),
+        "w_up": ("experts", "fsdp", None),
+        "w_down": ("experts", None, "fsdp"),
+    }
+    if cfg.num_shared_experts:
+        fs_ = cfg.expert_d_ff * cfg.num_shared_experts
+        p["shared_gate"] = jax.random.normal(k5, (d, fs_), jnp.float32) * s_in
+        p["shared_up"] = jax.random.normal(k1, (d, fs_), jnp.float32) * s_in
+        p["shared_down"] = jax.random.normal(k2, (fs_, d), jnp.float32) * s_out
+        a["shared_gate"] = ("fsdp", "ff")
+        a["shared_up"] = ("fsdp", "ff")
+        a["shared_down"] = ("ff", "fsdp")
+    return p, a
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Top-k capacity-factor MoE with dense one-hot dispatch.
+
+    Tokens are grouped (moe_group_size) so the dispatch tensor stays
+    VMEM-friendly; the experts axis shards over 'model' (EP) and the SPMD
+    partitioner turns the dispatch einsums into all-to-alls.
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    g_sz = min(cfg.moe_group_size, b * s)
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0]
+    assert n % g_sz == 0, (n, g_sz)
+    g = n // g_sz
+    xt = constrain(tokens.reshape(g, g_sz, d), "batch", None, None)
+    cap = max(int(g_sz * k * cfg.capacity_factor / e), 1)
+
+    gates = jax.nn.softmax(
+        jnp.einsum("gsd,de->gse", xt.astype(jnp.float32), p["router"]), -1)
+    topv, topi = jax.lax.top_k(gates, k)                      # (g, s, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # capacity assignment: position of each (token, slot) within its expert
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)       # (g, s, k, e)
+    flat = onehot.reshape(g, g_sz * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                     # arrival order
+    pos = pos.reshape(g, g_sz, k, e)
+    keep = (pos < cap) * onehot                               # fits capacity
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                            dtype=jnp.float32) * keep[..., None]
+    # dispatch tensor: (g, s, e, c), sharded over BOTH the group axis
+    # (batch) and the expert axis (model). This makes the dispatch einsum
+    # and the expert FFNs fully local: each device computes expert_in for
+    # its expert shard from its token shard, and the only cross-device
+    # traffic is the small (g, s, d) partial-sum reduce at combine — vs. a
+    # 22 GB fp32 all-reduce of the dispatched tensor per layer otherwise
+    # (§Perf MoE iteration 2).
+    dispatch = pos_oh.sum(2)
+    if not baseline_mode():
+        dispatch = constrain(dispatch, "batch", None, "experts", None)
+    combine = (dispatch * jnp.einsum("gsk,gske->gse", topv, onehot
+                                     )[..., None])
+    if not baseline_mode():
+        combine = constrain(combine, "batch", None, "experts", None)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch.astype(dt), xt)
+    # keep the token-group axis sharded over the data axes: dropping it
+    # forces the partitioner to all-gather every group onto every device
+    # (a ~300x collective blowup on the multi-pod mesh — §Perf iteration 1
+    # for the MoE cells). With both 'experts'->model and 'batch'->data kept,
+    # the dispatch/combine einsums stay local and only the small combine
+    # partial-sum crosses the wire.
+    if baseline_mode():
+        expert_in = constrain(expert_in, "experts", None, None, None)
+    else:
+        expert_in = constrain(expert_in, "experts", "batch", None, None)
+    gate = jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"].astype(dt))
+    up = jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"].astype(dt))
+    hidden = jax.nn.silu(gate) * up
+    expert_out = jnp.einsum("egcf,efd->egcd", hidden, p["w_down"].astype(dt))
+    expert_out = constrain(expert_out, "experts", "batch", None, None)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(dt), expert_out)
+    y = constrain(y, "batch", None, None)
+
+    if cfg.num_shared_experts:
+        sg = jax.nn.silu(xt @ p["shared_gate"].astype(dt))
+        su = xt @ p["shared_up"].astype(dt)
+        y = y + (sg * su) @ p["shared_down"].astype(dt)
+    return y.reshape(b, s, d)

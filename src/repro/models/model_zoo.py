@@ -1,0 +1,150 @@
+"""Unified Model API over all families.
+
+``build_model(cfg)`` returns a ``Model`` whose methods cover the three shape
+kinds: ``loss`` (train), ``prefill`` and ``decode_step`` (serving), plus
+``input_specs(shape)`` producing ShapeDtypeStruct stand-ins for the dry-run
+(no allocation) and ``init``/``init_cache`` for real runs.
+
+Input conventions per family (DESIGN.md §4):
+  * decoder LM / moe / ssm / hybrid: {"tokens": (B, S) int32}
+  * vlm: {"patches": (B, S/8, D) dtype, "tokens": (B, S - S/8) int32}
+    — patch embeddings come from the stub frontend
+  * audio (enc-dec): {"frames": (B, S/2, D) dtype, "tokens": (B, S/2) int32}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.dist.sharding import constrain
+from repro.models import transformer as T
+
+Params = dict[str, Any]
+
+
+def _xent(logits: jax.Array, targets: jax.Array, mask: jax.Array
+          ) -> jax.Array:
+    """Masked mean cross-entropy; logits fp32 (B, S, V)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # ---- init -------------------------------------------------------------
+    def init(self, key: jax.Array) -> tuple[Params, Params]:
+        return T.init_lm(key, self.cfg)
+
+    def abstract_params(self) -> tuple[Params, Params]:
+        """(param ShapeDtypeStructs, logical axes) without any allocation.
+
+        ``init_lm`` is traced under ``eval_shape`` (arrays stay abstract);
+        the axes pytree is plain Python built during tracing and is smuggled
+        out via a closure.
+        """
+        box: dict = {}
+
+        def f():
+            p, a = T.init_lm(jax.random.PRNGKey(0), self.cfg)
+            box["axes"] = a
+            return p
+
+        shapes = jax.eval_shape(f)
+        return shapes, box["axes"]
+
+    # ---- train ------------------------------------------------------------
+    def loss(self, params: Params, batch: dict, remat: str = "full"
+             ) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            patches = batch["patches"]
+            tokens = batch["tokens"]
+            tok_x = T.embed_tokens(params, tokens, cfg)
+            x = jnp.concatenate([patches.astype(tok_x.dtype), tok_x], axis=1)
+            logits = T.forward_train(params, x, cfg, remat=remat,
+                                     is_embedded=True)
+            # loss on text region only: positions P-1 .. P+St-2 predict tokens
+            p_len = patches.shape[1]
+            text_logits = logits[:, p_len - 1:-1]
+            mask = jnp.ones(tokens.shape, jnp.float32)
+            return _xent(text_logits, tokens, mask)
+        if cfg.is_encoder_decoder:
+            memory = T.encode(params, batch["frames"], cfg, remat=remat)
+            tokens = batch["tokens"]
+            logits = T.forward_train(params, tokens, cfg, remat=remat,
+                                     memory=memory)
+            return _xent(logits[:, :-1], tokens[:, 1:],
+                         jnp.ones(tokens[:, 1:].shape, jnp.float32))
+        tokens = batch["tokens"]
+        logits = T.forward_train(params, tokens, cfg, remat=remat)
+        return _xent(logits[:, :-1], tokens[:, 1:],
+                     jnp.ones(tokens[:, 1:].shape, jnp.float32))
+
+    # ---- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        return T.init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, params: Params, batch: dict, cache):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            tok_x = T.embed_tokens(params, batch["tokens"], cfg)
+            x = jnp.concatenate(
+                [batch["patches"].astype(tok_x.dtype), tok_x], axis=1)
+            return T.forward_prefill(params, x, cfg, cache, is_embedded=True)
+        if cfg.is_encoder_decoder:
+            memory = T.encode(params, batch["frames"], cfg)
+            return T.forward_prefill(params, batch["tokens"], cfg, cache,
+                                     memory=memory)
+        return T.forward_prefill(params, batch["tokens"], cfg, cache)
+
+    def decode_step(self, params: Params, token: jax.Array, cache,
+                    pos: jax.Array):
+        return T.forward_decode(params, token, self.cfg, cache, pos)
+
+    # ---- dry-run input specs ----------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+        if shape.kind == "train":
+            if cfg.family == "vlm":
+                p_len = S // cfg.vision_fraction
+                return {"patches": jax.ShapeDtypeStruct((B, p_len, cfg.d_model), dt),
+                        "tokens": tok(B, S - p_len)}
+            if cfg.is_encoder_decoder:
+                return {"frames": jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), dt),
+                        "tokens": tok(B, S // 2)}
+            return {"tokens": tok(B, S)}
+
+        if shape.kind == "prefill":
+            specs = self.input_specs(dataclasses.replace(shape, kind="train"))
+            cache = jax.eval_shape(lambda: self.init_cache(B, self._cache_len(S)))
+            return {"batch": specs, "cache": cache}
+
+        # decode: one new token against a seq_len-deep cache/state
+        cache = jax.eval_shape(lambda: self.init_cache(B, self._cache_len(S)))
+        return {
+            "token": tok(B, 1),
+            "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def _cache_len(self, seq_len: int) -> int:
+        # enc-dec decodes seq_len//2 tokens (the other half is encoder frames)
+        return seq_len // 2 if self.cfg.is_encoder_decoder else seq_len
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,350 @@
+"""Recurrent sequence-mixing layers: Mamba-style selective SSM (Hymba),
+mLSTM and sLSTM (xLSTM). All are linear recurrences executed *chunkwise*:
+``lax.scan`` over fixed-size time chunks carrying the recurrent state, with
+parallel (attention-like or associative-scan) math inside each chunk — the
+TPU-native adaptation of these GPU kernels (DESIGN.md §2).
+
+Each layer exposes:
+  init_*           -> (params, axes)
+  *_train          -> full-sequence forward (chunked recurrence)
+  *_decode         -> single-token step against an explicit state
+  init_*_state     -> zero state for decoding
+
+States are bounded (O(d * state) per layer), which is what makes the
+long_500k decode shape feasible for the ssm/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (diagonal A), used by Hymba's SSM heads
+# ---------------------------------------------------------------------------
+
+def init_mamba(key: jax.Array, cfg: ArchConfig) -> tuple[Params, Params]:
+    d, n = cfg.d_model, cfg.ssm_state
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    s = d ** -0.5
+    p = {
+        "w_in": jax.random.normal(k1, (d, 2 * d), jnp.float32) * s,   # x, z
+        "w_b": jax.random.normal(k2, (d, n), jnp.float32) * s,
+        "w_c": jax.random.normal(k3, (d, n), jnp.float32) * s,
+        "w_dt": jax.random.normal(k4, (d, 1), jnp.float32) * s,
+        "a_log": jnp.log(jnp.linspace(1.0, float(n), n))[None, :]
+                 * jnp.ones((d, 1), jnp.float32),                      # (d, n)
+        "d_skip": jnp.ones((d,), jnp.float32),
+        "w_out": jax.random.normal(k5, (d, d), jnp.float32) * s,
+        "dt_bias": jax.random.uniform(k6, (d,), jnp.float32, -4.0, -2.0),
+    }
+    a = {
+        "w_in": ("fsdp", "ff"), "w_b": ("fsdp", None), "w_c": ("fsdp", None),
+        "w_dt": ("fsdp", None), "a_log": (None, None), "d_skip": (None,),
+        "w_out": ("fsdp", None), "dt_bias": (None,),
+    }
+    return p, a
+
+
+def _mamba_scan_chunk(h0, xb, dtb, Bb, Cb, a):
+    """One chunk of the diagonal-SSM recurrence via associative scan.
+
+    h0:  (B, d, n) carry;  xb/dtb: (B, T, d);  Bb/Cb: (B, T, n); a: (d, n)
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t . h_t
+    """
+    decay = jnp.exp(dtb[..., None] * a)                    # (B,T,d,n)
+    inp = (dtb * xb)[..., None] * Bb[:, :, None, :]        # (B,T,d,n)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    aa, bb = jax.lax.associative_scan(comb, (decay, inp), axis=1)
+    h = aa * h0[:, None] + bb                              # (B,T,d,n)
+    y = jnp.einsum("btdn,btn->btd", h, Cb)
+    return h[:, -1], y
+
+
+def mamba_train(p: Params, x: jax.Array, cfg: ArchConfig, chunk: int = 64
+                ) -> jax.Array:
+    dt_ = x.dtype
+    b, s, d = x.shape
+    xz = x @ p["w_in"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi_f = xi.astype(jnp.float32)
+    Bt = (x @ p["w_b"].astype(dt_)).astype(jnp.float32)
+    Ct = (x @ p["w_c"].astype(dt_)).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"].astype(dt_)).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                                # (d, n) negative
+
+    c = min(chunk, s)
+    assert s % c == 0
+    nch = s // c
+    xs = (xi_f.reshape(b, nch, c, d).swapaxes(0, 1),
+          dt.reshape(b, nch, c, d).swapaxes(0, 1),
+          Bt.reshape(b, nch, c, -1).swapaxes(0, 1),
+          Ct.reshape(b, nch, c, -1).swapaxes(0, 1))
+
+    def body(h, xs_c):
+        xb, dtb, Bb, Cb = xs_c
+        h, y = _mamba_scan_chunk(h, xb, dtb, Bb, Cb, a)
+        return h, y
+
+    h0 = jnp.zeros((b, d, cfg.ssm_state), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, d)
+    y = y + xi_f * p["d_skip"]
+    y = (y.astype(dt_) * jax.nn.silu(z))
+    return y @ p["w_out"].astype(dt_)
+
+
+@dataclasses.dataclass
+class MambaState:
+    h: jax.Array  # (B, d, n) float32
+
+jax.tree_util.register_dataclass(MambaState, data_fields=["h"], meta_fields=[])
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> MambaState:
+    return MambaState(h=jnp.zeros((batch, cfg.d_model, cfg.ssm_state),
+                                  jnp.float32))
+
+
+def mamba_decode(p: Params, x: jax.Array, cfg: ArchConfig, state: MambaState
+                 ) -> tuple[jax.Array, MambaState]:
+    """x: (B, 1, D)."""
+    dt_ = x.dtype
+    xz = x @ p["w_in"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi_f = xi[:, 0].astype(jnp.float32)                     # (B, d)
+    Bt = (x @ p["w_b"].astype(dt_))[:, 0].astype(jnp.float32)
+    Ct = (x @ p["w_c"].astype(dt_))[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"].astype(dt_))[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt[..., None] * a)                      # (B,d,n)
+    h = state.h * decay + (dt * xi_f)[..., None] * Bt[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Ct) + xi_f * p["d_skip"]
+    y = (y[:, None].astype(dt_) * jax.nn.silu(z))
+    return y @ p["w_out"].astype(dt_), MambaState(h=h)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    d_inner = 2 * cfg.d_model
+    h = cfg.num_heads
+    return d_inner, h, d_inner // h
+
+
+def init_mlstm(key: jax.Array, cfg: ArchConfig) -> tuple[Params, Params]:
+    d = cfg.d_model
+    d_inner, h, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    s, si = d ** -0.5, d_inner ** -0.5
+    p = {
+        "w_up": jax.random.normal(ks[0], (d, 2 * d_inner), jnp.float32) * s,
+        "w_q": jax.random.normal(ks[1], (d_inner, h, dh), jnp.float32) * si,
+        "w_k": jax.random.normal(ks[2], (d_inner, h, dh), jnp.float32) * si,
+        "w_v": jax.random.normal(ks[3], (d_inner, h, dh), jnp.float32) * si,
+        "w_i": jax.random.normal(ks[4], (d_inner, h), jnp.float32) * si,
+        "w_f": jax.random.normal(ks[5], (d_inner, h), jnp.float32) * si,
+        "f_bias": jnp.full((h,), 3.0, jnp.float32),  # open forget gates
+        "w_down": jax.random.normal(ks[6], (d_inner, d), jnp.float32) * si,
+    }
+    a = {
+        "w_up": ("fsdp", "ff"),
+        "w_q": (None, "heads", None), "w_k": (None, "heads", None),
+        "w_v": (None, "heads", None),
+        "w_i": (None, "heads"), "w_f": (None, "heads"),
+        "f_bias": (None,),
+        "w_down": ("ff", "fsdp"),
+    }
+    return p, a
+
+
+def mlstm_train(p: Params, x: jax.Array, cfg: ArchConfig, chunk: int = 256
+                ) -> jax.Array:
+    """Chunkwise-parallel mLSTM with sigmoid forget gates.
+
+    Within a chunk: decay-weighted attention-like scores; across chunks: the
+    (C, n) matrix/normalizer state is carried by lax.scan. Sigmoid f <= 1
+    keeps cumulative decays in (0, 1] so no max-stabilizer is needed.
+    """
+    dt_ = x.dtype
+    b, s, d = x.shape
+    d_inner, h, dh = _mlstm_dims(cfg)
+    up = x @ p["w_up"].astype(dt_)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsd,dhk->bshk", xi, p["w_q"].astype(dt_)).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", xi, p["w_k"].astype(dt_)).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", xi, p["w_v"].astype(dt_)).astype(jnp.float32)
+    xf = xi.astype(jnp.float32)
+    ig = jnp.exp(jnp.clip(jnp.einsum("bsd,dh->bsh", xf, p["w_i"]), -10., 5.))
+    fg = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", xf, p["w_f"]) + p["f_bias"])
+    q = q * dh ** -0.5
+
+    c = min(chunk, s)
+    assert s % c == 0
+    nch = s // c
+    resh = lambda t: t.reshape(b, nch, c, *t.shape[2:]).swapaxes(0, 1)
+    qs, ks, vs, is_, fs_ = map(resh, (q, k, v, ig, fg))
+
+    def body(carry, xs_c):
+        C, n = carry                      # (b,h,dh,dh), (b,h,dh)
+        qb, kb, vb, ib, fb = xs_c         # (b,c,h,*)
+        logf = jnp.log(jnp.maximum(fb, 1e-9))               # (b,c,h)
+        F = jnp.cumsum(logf, axis=1)                        # prod f_1..t
+        # intra-chunk decay matrix D[t, u] = exp(F_t - F_u) * i_u for u <= t
+        Ft = F[:, :, None, :]
+        Fu = F[:, None, :, :]
+        mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])[None, :, :, None]
+        D = jnp.where(mask, jnp.exp(Ft - Fu) * ib[:, None, :, :], 0.0)  # (b,t,u,h)
+        scores = jnp.einsum("bthk,buhk->btuh", qb, kb) * D
+        h_intra = jnp.einsum("btuh,buhk->bthk", scores, vb)
+        # inter-chunk: contribution of the carried state, decayed by f_1..f_t
+        decay_t = jnp.exp(F)                                # (b,c,h)
+        h_inter = jnp.einsum("bthk,bhkl,bth->bthl", qb, C, decay_t)
+        n_inter = jnp.einsum("bthk,bhk,bth->bth", qb, n, decay_t)
+        # normalizer: n_t = q_t . (sum_u D[t,u] k_u) + carried part
+        nk = jnp.einsum("btuh,buhk->bthk", D, kb)
+        n_t = jnp.einsum("bthk,bthk->bth", qb, nk) + n_inter
+        h_t = h_intra + h_inter
+        denom = jnp.maximum(jnp.abs(n_t), 1.0)[..., None]
+        out = h_t / denom
+        # state update
+        FT = F[:, -1, :]                                    # (b,h)
+        wk = jnp.exp(FT[:, None, :] - F) * ib               # (b,c,h)
+        C_new = C * jnp.exp(FT)[..., None, None] + jnp.einsum(
+            "buhk,buhl,buh->bhkl", kb, vb, wk)
+        n_new = n * jnp.exp(FT)[..., None] + jnp.einsum(
+            "buhk,buh->bhk", kb, wk)
+        return (C_new, n_new), out
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    _, outs = jax.lax.scan(body, (C0, n0), (qs, ks, vs, is_, fs_))
+    out = outs.swapaxes(0, 1).reshape(b, s, h * dh).astype(dt_)
+    out = out * jax.nn.silu(z)
+    return out @ p["w_down"].astype(dt_)
+
+
+@dataclasses.dataclass
+class MLSTMState:
+    C: jax.Array  # (B, H, dh, dh)
+    n: jax.Array  # (B, H, dh)
+
+jax.tree_util.register_dataclass(MLSTMState, data_fields=["C", "n"],
+                                 meta_fields=[])
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> MLSTMState:
+    _, h, dh = _mlstm_dims(cfg)
+    return MLSTMState(C=jnp.zeros((batch, h, dh, dh), jnp.float32),
+                      n=jnp.zeros((batch, h, dh), jnp.float32))
+
+
+def mlstm_decode(p: Params, x: jax.Array, cfg: ArchConfig, state: MLSTMState
+                 ) -> tuple[jax.Array, MLSTMState]:
+    dt_ = x.dtype
+    b = x.shape[0]
+    d_inner, h, dh = _mlstm_dims(cfg)
+    up = x @ p["w_up"].astype(dt_)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xf = xi[:, 0].astype(jnp.float32)
+    q = jnp.einsum("bd,dhk->bhk", xf, p["w_q"].astype(jnp.float32)) * dh ** -0.5
+    k = jnp.einsum("bd,dhk->bhk", xf, p["w_k"].astype(jnp.float32))
+    v = jnp.einsum("bd,dhk->bhk", xf, p["w_v"].astype(jnp.float32))
+    ig = jnp.exp(jnp.clip(xf @ p["w_i"], -10., 5.))          # (b,h)
+    fg = jax.nn.sigmoid(xf @ p["w_f"] + p["f_bias"])
+    C = state.C * fg[..., None, None] + ig[..., None, None] * jnp.einsum(
+        "bhk,bhl->bhkl", k, v)
+    n = state.n * fg[..., None] + ig[..., None] * k
+    num = jnp.einsum("bhk,bhkl->bhl", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), 1.0)
+    out = (num / den[..., None]).reshape(b, 1, h * dh).astype(dt_)
+    out = out * jax.nn.silu(z)
+    return out @ p["w_down"].astype(dt_), MLSTMState(C=C, n=n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block) — elementwise linear recurrence
+# ---------------------------------------------------------------------------
+
+def init_slstm(key: jax.Array, cfg: ArchConfig) -> tuple[Params, Params]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = {
+        "w_z": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "w_i": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "w_f": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "w_o": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "w_down": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+    }
+    a = {"w_z": ("fsdp", None), "w_i": ("fsdp", None), "w_f": ("fsdp", None),
+         "w_o": ("fsdp", None), "f_bias": (None,), "w_down": ("fsdp", None)}
+    return p, a
+
+
+def slstm_train(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt_ = x.dtype
+    xf = x.astype(jnp.float32)
+    z = jnp.tanh(xf @ p["w_z"])
+    i = jax.nn.sigmoid(xf @ p["w_i"])
+    f = jax.nn.sigmoid(xf @ p["w_f"] + p["f_bias"])
+    o = jax.nn.sigmoid(xf @ p["w_o"])
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    # c_t = f_t c_{t-1} + i_t z_t ; n_t = f_t n_{t-1} + i_t
+    c_a, c_b = jax.lax.associative_scan(comb, (f, i * z), axis=1)
+    n_a, n_b = jax.lax.associative_scan(comb, (f, i), axis=1)
+    c = c_b   # zero initial state
+    n = jnp.maximum(n_b, 1e-6)
+    h = o * (c / n)
+    return (h @ p["w_down"]).astype(dt_)
+
+
+@dataclasses.dataclass
+class SLSTMState:
+    c: jax.Array  # (B, D)
+    n: jax.Array  # (B, D)
+
+jax.tree_util.register_dataclass(SLSTMState, data_fields=["c", "n"],
+                                 meta_fields=[])
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> SLSTMState:
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return SLSTMState(c=z, n=z)
+
+
+def slstm_decode(p: Params, x: jax.Array, cfg: ArchConfig, state: SLSTMState
+                 ) -> tuple[jax.Array, SLSTMState]:
+    dt_ = x.dtype
+    xf = x[:, 0].astype(jnp.float32)
+    z = jnp.tanh(xf @ p["w_z"])
+    i = jax.nn.sigmoid(xf @ p["w_i"])
+    f = jax.nn.sigmoid(xf @ p["w_f"] + p["f_bias"])
+    o = jax.nn.sigmoid(xf @ p["w_o"])
+    c = f * state.c + i * z
+    n = jnp.maximum(f * state.n + i, 1e-6)
+    h = o * (c / n)
+    return (h @ p["w_down"])[:, None].astype(dt_), SLSTMState(c=c, n=n)

@@ -1,0 +1,505 @@
+"""Model assembly: blocks per family, scan-over-layers forward passes,
+KV/recurrent caches, decoder-only + encoder-decoder stacks.
+
+Compile-time discipline: homogeneous layer stacks are initialized *stacked*
+(leading 'layer' axis) and executed with ``lax.scan`` so HLO size — and
+therefore dry-run compile time for 88-layer models on 512 host devices — is
+independent of depth. Heterogeneous stacks (xLSTM's mLSTM/sLSTM mix) are
+unrolled; they are small.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# block kinds
+# ---------------------------------------------------------------------------
+
+def block_kind(cfg: ArchConfig, layer_idx: int = 0) -> str:
+    if cfg.family == "moe":
+        return "attn_moe"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.family == "ssm":
+        if cfg.ssm_ratio and (layer_idx + 1) % cfg.ssm_ratio == 0:
+            return "slstm"
+        return "mlstm"
+    return "attn_ffn"
+
+
+def init_block(key: jax.Array, cfg: ArchConfig, kind: str
+               ) -> tuple[Params, Params]:
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    if kind in ("attn_ffn", "attn_moe", "hybrid"):
+        p["norm1"], a["norm1"] = L.init_norm(cfg)
+        p["attn"], a["attn"] = L.init_attention(ks[0], cfg)
+        p["norm2"], a["norm2"] = L.init_norm(cfg)
+        if kind == "attn_moe":
+            p["moe"], a["moe"] = L.init_moe(ks[1], cfg)
+        else:
+            p["ffn"], a["ffn"] = L.init_ffn(ks[1], cfg)
+        if kind == "hybrid":
+            p["mamba"], a["mamba"] = R.init_mamba(ks[2], cfg)
+            p["alpha"] = jnp.ones((2,), jnp.float32) * 0.5
+            a["alpha"] = (None,)
+    elif kind == "mlstm":
+        p["norm1"], a["norm1"] = L.init_norm(cfg)
+        p["mix"], a["mix"] = R.init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["norm1"], a["norm1"] = L.init_norm(cfg)
+        p["mix"], a["mix"] = R.init_slstm(ks[0], cfg)
+    elif kind == "enc":
+        p["norm1"], a["norm1"] = L.init_norm(cfg)
+        p["attn"], a["attn"] = L.init_attention(ks[0], cfg)
+        p["norm2"], a["norm2"] = L.init_norm(cfg)
+        p["ffn"], a["ffn"] = L.init_ffn(ks[1], cfg)
+    elif kind == "dec_cross":
+        p["norm1"], a["norm1"] = L.init_norm(cfg)
+        p["attn"], a["attn"] = L.init_attention(ks[0], cfg)
+        p["norm_x"], a["norm_x"] = L.init_norm(cfg)
+        p["xattn"], a["xattn"] = L.init_attention(ks[1], cfg)
+        p["norm2"], a["norm2"] = L.init_norm(cfg)
+        p["ffn"], a["ffn"] = L.init_ffn(ks[2], cfg)
+    else:
+        raise ValueError(kind)
+    return p, a
+
+
+def _cross_attention(p: Params, x: jax.Array, memory_kv, cfg: ArchConfig
+                     ) -> jax.Array:
+    """Cross-attention with precomputed memory K/V (no RoPE)."""
+    dt = x.dtype
+    k, v = memory_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    out = L.attention_full(q, k, v, cfg, causal=False)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+
+
+def cross_kv(p: Params, memory: jax.Array, cfg: ArchConfig):
+    dt = memory.dtype
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(dt))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# block application — training / full-sequence mode
+# ---------------------------------------------------------------------------
+
+def apply_block_train(p: Params, x: jax.Array, cfg: ArchConfig, kind: str,
+                      memory: jax.Array | None = None) -> jax.Array:
+    if kind in ("attn_ffn", "attn_moe", "hybrid", "enc"):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        attn = L.attention_train(p["attn"], h, cfg, causal=(kind != "enc"))
+        if kind == "hybrid":
+            ssm = R.mamba_train(p["mamba"], h, cfg)
+            attn = p["alpha"][0].astype(x.dtype) * attn \
+                 + p["alpha"][1].astype(x.dtype) * ssm
+        # constrain the TP partial-sum output to the seq-sharded layout
+        # BEFORE the residual add: the partitioner can then reduce into the
+        # sharded layout instead of all-reducing the full activation
+        # (§Perf it.2; REPRO_BASELINE=1 restores the after-add constrain)
+        from repro.dist.sharding import baseline_mode
+        if not baseline_mode():
+            attn = constrain(attn.astype(x.dtype), "batch", "seq_shard", None)
+        x = x + attn
+        if baseline_mode():
+            x = constrain(x, "batch", "seq_shard", None)
+        h = L.apply_norm(p["norm2"], x, cfg)
+        if kind == "attn_moe":
+            y = L.apply_moe(p["moe"], h, cfg)
+        else:
+            y = L.apply_ffn(p["ffn"], h, cfg)
+        if not baseline_mode():
+            y = constrain(y.astype(x.dtype), "batch", "seq_shard", None)
+        x = x + y
+        if baseline_mode():
+            x = constrain(x, "batch", "seq_shard", None)
+        return x
+    if kind == "mlstm":
+        return x + R.mlstm_train(p["mix"], L.apply_norm(p["norm1"], x, cfg), cfg)
+    if kind == "slstm":
+        return x + R.slstm_train(p["mix"], L.apply_norm(p["norm1"], x, cfg), cfg)
+    if kind == "dec_cross":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        x = x + L.attention_train(p["attn"], h, cfg, causal=True)
+        h = L.apply_norm(p["norm_x"], x, cfg)
+        x = x + _cross_attention(p["xattn"], h, cross_kv(p["xattn"], memory, cfg), cfg)
+        h = L.apply_norm(p["norm2"], x, cfg)
+        return x + L.apply_ffn(p["ffn"], h, cfg)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# block application — prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn_ffn", "attn_moe"):
+        return L.init_kv_cache(cfg, batch, max_len)
+    if kind == "hybrid":
+        return (L.init_kv_cache(cfg, batch, max_len), R.init_mamba_state(cfg, batch))
+    if kind == "mlstm":
+        return R.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return R.init_slstm_state(cfg, batch)
+    if kind == "dec_cross":
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        xkv = (jnp.zeros((batch, max_len, kv, hd), dt),) * 2
+        return (L.init_kv_cache(cfg, batch, max_len), xkv)
+    raise ValueError(kind)
+
+
+def apply_block_prefill(p: Params, x: jax.Array, cfg: ArchConfig, kind: str,
+                        cache, memory: jax.Array | None = None):
+    if kind in ("attn_ffn", "attn_moe", "hybrid"):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        if kind == "hybrid":
+            kvc, sst = cache
+            attn, kvc = L.attention_prefill(p["attn"], h, cfg, kvc)
+            ssm = R.mamba_train(p["mamba"], h, cfg)
+            # roll the SSM state forward over the whole prompt
+            sst = _mamba_state_after(p["mamba"], h, cfg)
+            attn = p["alpha"][0].astype(x.dtype) * attn \
+                 + p["alpha"][1].astype(x.dtype) * ssm
+            cache = (kvc, sst)
+        else:
+            attn, cache = L.attention_prefill(p["attn"], h, cfg, cache)
+        x = x + attn
+        h = L.apply_norm(p["norm2"], x, cfg)
+        y = L.apply_moe(p["moe"], h, cfg) if kind == "attn_moe" \
+            else L.apply_ffn(p["ffn"], h, cfg)
+        return x + y, cache
+    if kind in ("mlstm", "slstm"):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        if kind == "mlstm":
+            y = R.mlstm_train(p["mix"], h, cfg)
+            st = _mlstm_state_after(p["mix"], h, cfg)
+        else:
+            y = R.slstm_train(p["mix"], h, cfg)
+            st = _slstm_state_after(p["mix"], h, cfg)
+        return x + y, st
+    if kind == "dec_cross":
+        kvc, _ = cache
+        h = L.apply_norm(p["norm1"], x, cfg)
+        attn, kvc = L.attention_prefill(p["attn"], h, cfg, kvc)
+        x = x + attn
+        xkv = cross_kv(p["xattn"], memory, cfg)
+        h = L.apply_norm(p["norm_x"], x, cfg)
+        x = x + _cross_attention(p["xattn"], h, xkv, cfg)
+        h = L.apply_norm(p["norm2"], x, cfg)
+        return x + L.apply_ffn(p["ffn"], h, cfg), (kvc, xkv)
+    raise ValueError(kind)
+
+
+def apply_block_decode(p: Params, x: jax.Array, cfg: ArchConfig, kind: str,
+                       cache, pos):
+    if kind in ("attn_ffn", "attn_moe", "hybrid"):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        if kind == "hybrid":
+            kvc, sst = cache
+            attn, kvc = L.attention_decode(p["attn"], h, cfg, kvc, pos)
+            ssm, sst = R.mamba_decode(p["mamba"], h, cfg, sst)
+            attn = p["alpha"][0].astype(x.dtype) * attn \
+                 + p["alpha"][1].astype(x.dtype) * ssm
+            cache = (kvc, sst)
+        else:
+            attn, cache = L.attention_decode(p["attn"], h, cfg, cache, pos)
+        x = x + attn
+        h = L.apply_norm(p["norm2"], x, cfg)
+        # decode uses the dense path for MoE too (top-k of one token)
+        y = L.apply_moe(p["moe"], h, cfg) if kind == "attn_moe" \
+            else L.apply_ffn(p["ffn"], h, cfg)
+        return x + y, cache
+    if kind == "mlstm":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        y, st = R.mlstm_decode(p["mix"], h, cfg, cache)
+        return x + y, st
+    if kind == "slstm":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        y, st = R.slstm_decode(p["mix"], h, cfg, cache)
+        return x + y, st
+    if kind == "dec_cross":
+        kvc, xkv = cache
+        h = L.apply_norm(p["norm1"], x, cfg)
+        attn, kvc = L.attention_decode(p["attn"], h, cfg, kvc, pos)
+        x = x + attn
+        h = L.apply_norm(p["norm_x"], x, cfg)
+        x = x + _cross_attention(p["xattn"], h, xkv, cfg)
+        h = L.apply_norm(p["norm2"], x, cfg)
+        return x + L.apply_ffn(p["ffn"], h, cfg), (kvc, xkv)
+    raise ValueError(kind)
+
+
+# --- state-after-prompt helpers (prefill for recurrent layers) -------------
+
+def _mamba_state_after(p, h, cfg) -> R.MambaState:
+    # re-run the recurrence keeping only the final state (cheap vs. attn)
+    dt_ = h.dtype
+    xz = h @ p["w_in"].astype(dt_)
+    xi, _ = jnp.split(xz, 2, axis=-1)
+    xi_f = xi.astype(jnp.float32)
+    Bt = (h @ p["w_b"].astype(dt_)).astype(jnp.float32)
+    dt = jax.nn.softplus((h @ p["w_dt"].astype(dt_)).astype(jnp.float32)
+                         + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt[..., None] * a)
+    inp = (dt * xi_f)[..., None] * Bt[:, :, None, :]
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    aa, bb = jax.lax.associative_scan(comb, (decay, inp), axis=1)
+    return R.MambaState(h=bb[:, -1])
+
+
+def _mlstm_state_after(p, h, cfg) -> R.MLSTMState:
+    dt_ = h.dtype
+    b, s, _ = h.shape
+    d_inner, nh, dh = R._mlstm_dims(cfg)
+    up = h @ p["w_up"].astype(dt_)
+    xi, _ = jnp.split(up, 2, axis=-1)
+    xf = xi.astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", xf, p["w_k"].astype(jnp.float32))
+    v = jnp.einsum("bsd,dhk->bshk", xf, p["w_v"].astype(jnp.float32))
+    ig = jnp.exp(jnp.clip(jnp.einsum("bsd,dh->bsh", xf, p["w_i"]), -10., 5.))
+    fg = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", xf, p["w_f"]) + p["f_bias"])
+    F = jnp.cumsum(jnp.log(jnp.maximum(fg, 1e-9)), axis=1)
+    FT = F[:, -1]
+    wk = jnp.exp(FT[:, None] - F) * ig
+    C = jnp.einsum("bshk,bshl,bsh->bhkl", k, v, wk)
+    n = jnp.einsum("bshk,bsh->bhk", k, wk)
+    return R.MLSTMState(C=C, n=n)
+
+
+def _slstm_state_after(p, h, cfg) -> R.SLSTMState:
+    xf = h.astype(jnp.float32)
+    z = jnp.tanh(xf @ p["w_z"])
+    i = jax.nn.sigmoid(xf @ p["w_i"])
+    f = jax.nn.sigmoid(xf @ p["w_f"] + p["f_bias"])
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, c = jax.lax.associative_scan(comb, (f, i * z), axis=1)
+    _, n = jax.lax.associative_scan(comb, (f, i), axis=1)
+    return R.SLSTMState(c=c[:, -1], n=jnp.maximum(n[:, -1], 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# full decoder-only model
+# ---------------------------------------------------------------------------
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # 'full': save only layer boundaries
+
+
+def init_lm(key: jax.Array, cfg: ArchConfig) -> tuple[Params, Params]:
+    """Init a decoder-only (or encoder-decoder) model with stacked layers."""
+    k_e, k_l, k_h, k_enc = jax.random.split(key, 4)
+    V, D = cfg.padded_vocab, cfg.d_model
+    p: Params = {
+        "embed": jax.random.normal(k_e, (V, D), jnp.float32) * D ** -0.5,
+    }
+    a: Params = {"embed": ("vocab", "fsdp")}
+
+    if cfg.family == "ssm":
+        # heterogeneous stack: per-layer params, unrolled
+        blocks, baxes = [], []
+        for i, k in enumerate(jax.random.split(k_l, cfg.num_layers)):
+            bp, ba = init_block(k, cfg, block_kind(cfg, i))
+            blocks.append(bp)
+            baxes.append(ba)
+        p["blocks"] = blocks
+        a["blocks"] = baxes
+    else:
+        kind = "dec_cross" if cfg.is_encoder_decoder else block_kind(cfg)
+        keys = jax.random.split(k_l, cfg.num_layers)
+        bp = jax.vmap(lambda k: init_block(k, cfg, kind)[0])(keys)
+        _, ba = init_block(keys[0], cfg, kind)
+        p["layers"] = bp
+        a["layers"] = jax.tree.map(
+            lambda ax: ("layer",) + ax, ba,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    if cfg.is_encoder_decoder:
+        keys = jax.random.split(k_enc, cfg.num_encoder_layers)
+        ep = jax.vmap(lambda k: init_block(k, cfg, "enc")[0])(keys)
+        _, ea = init_block(keys[0], cfg, "enc")
+        p["enc_layers"] = ep
+        a["enc_layers"] = jax.tree.map(
+            lambda ax: ("layer",) + ax, ea,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        p["enc_norm"], a["enc_norm"] = L.init_norm(cfg)
+
+    p["final_norm"], a["final_norm"] = L.init_norm(cfg)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(k_h, (D, V), jnp.float32) * D ** -0.5
+        a["lm_head"] = ("fsdp", "vocab")
+    return p, a
+
+
+def embed_tokens(p: Params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return constrain(x, "batch", "seq_shard", None)
+
+
+def unembed(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embed"].astype(x.dtype))
+    else:
+        logits = x @ p["lm_head"].astype(x.dtype)
+    return logits.astype(jnp.float32)
+
+
+def forward_train(p: Params, tokens_or_x, cfg: ArchConfig,
+                  remat: str = "full", is_embedded: bool = False,
+                  memory: jax.Array | None = None) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, V)."""
+    x = tokens_or_x if is_embedded else embed_tokens(p, tokens_or_x, cfg)
+
+    if cfg.family == "ssm":
+        for i, bp in enumerate(p["blocks"]):
+            body = _remat(
+                functools.partial(apply_block_train, cfg=cfg,
+                                  kind=block_kind(cfg, i)), remat)
+            x = body(bp, x)
+    else:
+        kind = "dec_cross" if cfg.is_encoder_decoder else block_kind(cfg)
+
+        def body(carry, lp):
+            out = apply_block_train(lp, carry, cfg, kind, memory=memory)
+            return out, None
+
+        x, _ = jax.lax.scan(_remat(body, remat), x, p["layers"])
+
+    x = L.apply_norm(p["final_norm"], x, cfg)
+    return unembed(p, x, cfg)
+
+
+def encode(p: Params, frames: jax.Array, cfg: ArchConfig,
+           remat: str = "full") -> jax.Array:
+    """Encoder stack over precomputed frame embeddings (+ sinusoids)."""
+    b, s, d = frames.shape
+    pos = jnp.arange(s, dtype=jnp.float32)
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) / half * 9.0)
+    sin = jnp.sin(pos[:, None] * freq[None, :])
+    cos = jnp.cos(pos[:, None] * freq[None, :])
+    x = frames + jnp.concatenate([sin, cos], -1).astype(frames.dtype)[None]
+    x = constrain(x, "batch", "seq_shard", None)
+
+    def body(carry, lp):
+        return apply_block_train(lp, carry, cfg, "enc"), None
+
+    x, _ = jax.lax.scan(_remat(body, remat), x, p["enc_layers"])
+    return L.apply_norm(p["enc_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode drivers
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.family == "ssm":
+        return [init_block_cache(cfg, block_kind(cfg, i), batch, max_len)
+                for i in range(cfg.num_layers)]
+    kind = "dec_cross" if cfg.is_encoder_decoder else block_kind(cfg)
+    one = init_block_cache(cfg, kind, batch, max_len)
+    # stack over layers
+    return jax.tree.map(
+        lambda z: jnp.broadcast_to(z[None], (cfg.num_layers,) + z.shape), one)
+
+
+def forward_prefill(p: Params, tokens_or_x, cfg: ArchConfig, cache,
+                    is_embedded: bool = False,
+                    memory: jax.Array | None = None):
+    x = tokens_or_x if is_embedded else embed_tokens(p, tokens_or_x, cfg)
+    if cfg.family == "ssm":
+        new_cache = []
+        for i, bp in enumerate(p["blocks"]):
+            x, c = apply_block_prefill(bp, x, cfg, block_kind(cfg, i), cache[i])
+            new_cache.append(c)
+        x = L.apply_norm(p["final_norm"], x, cfg)
+        return unembed(p, x, cfg), new_cache
+
+    kind = "dec_cross" if cfg.is_encoder_decoder else block_kind(cfg)
+
+    def body(carry, xs):
+        x_c, cache_c = carry
+        i, lp = xs
+        lc = jax.tree.map(lambda c: jax.lax.dynamic_index_in_dim(
+            c, i, 0, keepdims=False), cache_c)
+        out, c = apply_block_prefill(lp, x_c, cfg, kind, lc, memory=memory)
+        cache_c = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), i, 0), cache_c, c)
+        return (out, cache_c), None
+
+    # cache rides in the carry (not xs/ys) so the while-loop updates it
+    # in place — scanning it as ys doubles peak memory with a full copy
+    (x, new_cache), _ = jax.lax.scan(
+        body, (x, cache), (jnp.arange(cfg.num_layers), p["layers"]))
+    x = L.apply_norm(p["final_norm"], x, cfg)
+    return unembed(p, x, cfg), new_cache
+
+
+def forward_decode(p: Params, token: jax.Array, cfg: ArchConfig, cache,
+                   pos: jax.Array):
+    """token: (B, 1) int32; pos: () int32 absolute position."""
+    x = embed_tokens(p, token, cfg)
+    if cfg.family == "ssm":
+        new_cache = []
+        for i, bp in enumerate(p["blocks"]):
+            x, c = apply_block_decode(bp, x, cfg, block_kind(cfg, i),
+                                      cache[i], pos)
+            new_cache.append(c)
+        x = L.apply_norm(p["final_norm"], x, cfg)
+        return unembed(p, x, cfg), new_cache
+
+    kind = "dec_cross" if cfg.is_encoder_decoder else block_kind(cfg)
+
+    def body(carry, xs):
+        x_c, cache_c = carry
+        i, lp = xs
+        lc = jax.tree.map(lambda c: jax.lax.dynamic_index_in_dim(
+            c, i, 0, keepdims=False), cache_c)
+        out, c = apply_block_decode(lp, x_c, cfg, kind, lc, pos)
+        cache_c = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), i, 0), cache_c, c)
+        return (out, cache_c), None
+
+    (x, new_cache), _ = jax.lax.scan(
+        body, (x, cache), (jnp.arange(cfg.num_layers), p["layers"]))
+    x = L.apply_norm(p["final_norm"], x, cfg)
+    return unembed(p, x, cfg), new_cache

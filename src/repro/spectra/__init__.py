@@ -1,0 +1,9 @@
+from repro.spectra.synthetic import SyntheticMSConfig, generate_dataset, MSDataset
+from repro.spectra.preprocess import bin_spectra, bucket_by_precursor
+from repro.spectra.fdr import fdr_filter, decoy_competition
+
+__all__ = [
+    "SyntheticMSConfig", "generate_dataset", "MSDataset",
+    "bin_spectra", "bucket_by_precursor",
+    "fdr_filter", "decoy_competition",
+]

@@ -1,0 +1,68 @@
+"""Spectrum preprocessing: binning, normalization, precursor bucketing.
+
+Mirrors the HyperSpec/HyperOMS preprocessing the paper reuses (§S.A): spectra
+are binned over the m/z range, intensity-normalized, and — for clustering —
+partitioned into buckets by precursor mass so the quadratic distance matrix
+stays per-bucket (§II.B Fig. 1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bin_spectra(mz: jax.Array, intensity: jax.Array, num_bins: int,
+                mz_range: tuple[float, float] = (200.0, 2000.0)) -> jax.Array:
+    """Bin raw (peaks) spectra to fixed-length vectors.
+
+    mz, intensity: (N, P) padded peak lists (zero-intensity pads ignored).
+    Returns (N, num_bins) max-pooled, [0,1]-normalized vectors.
+    """
+    lo, hi = mz_range
+    idx = jnp.clip(((mz - lo) / (hi - lo) * num_bins).astype(jnp.int32),
+                   0, num_bins - 1)
+    n = mz.shape[0]
+    rows = jnp.repeat(jnp.arange(n)[:, None], mz.shape[1], axis=1)
+    out = jnp.zeros((n, num_bins), jnp.float32)
+    out = out.at[rows.reshape(-1), idx.reshape(-1)].max(intensity.reshape(-1))
+    mx = jnp.maximum(out.max(axis=1, keepdims=True), 1e-6)
+    return out / mx
+
+
+def sqrt_normalize(spectra: jax.Array) -> jax.Array:
+    """Square-root intensity transform (standard MS practice to de-emphasize
+    dominant peaks) followed by re-normalization."""
+    s = jnp.sqrt(jnp.clip(spectra, 0.0, None))
+    mx = jnp.maximum(s.max(axis=1, keepdims=True), 1e-6)
+    return s / mx
+
+
+def bucket_by_precursor(precursor: np.ndarray, bucket_width: float = 40.0
+                        ) -> list[np.ndarray]:
+    """Partition spectrum indices into precursor-mass buckets.
+
+    Host-side (drives the per-bucket jitted clustering); returns a list of
+    index arrays sorted by bucket mass.
+    """
+    prec = np.asarray(precursor)
+    lo = float(prec.min())
+    bucket_ids = ((prec - lo) / bucket_width).astype(np.int64)
+    out = []
+    for b in np.unique(bucket_ids):
+        out.append(np.nonzero(bucket_ids == b)[0])
+    return out
+
+
+def candidate_window_mask(query_prec: jax.Array, ref_prec: jax.Array,
+                          tol: float = 20.0, open_search: bool = True,
+                          open_tol: float = 200.0) -> jax.Array:
+    """(Q, R) bool mask of references within the precursor tolerance window.
+
+    Open-modification search widens the window to +open_tol (mass additions),
+    which is what makes HEK293-style searches expensive — and is the
+    candidate_fraction knob of the energy model."""
+    d = ref_prec[None, :] - query_prec[:, None]
+    if open_search:
+        return (d > -tol) & (d < open_tol)
+    return jnp.abs(d) < tol

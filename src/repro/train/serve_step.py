@@ -1,0 +1,23 @@
+"""Serving step factories: prefill (prompt -> logits + cache) and decode
+(one token against the cache). These are what the decode_* / long_* dry-run
+shapes lower."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.models.model_zoo import Model
+
+
+def make_prefill(model: Model) -> Callable:
+    def prefill(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        return logits[:, -1:], cache
+    return prefill
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, token, cache, pos):
+        logits, cache = model.decode_step(params, token, cache, pos)
+        return logits, cache
+    return decode_step

@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run sets its own 512-device flag in its
+# own process). Cap compilation parallelism noise on the 1-core container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finiteness; serve path (prefill + decode) consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.data.tokens import TokenPipeline
+from repro.models import build_model
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            model = build_model(cfg)
+            state, axes = init_train_state(model, jax.random.PRNGKey(0))
+            cache[arch] = (cfg, model, state)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    # spot-check published numbers (the full table is in the config files)
+    assert cfg.num_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+    assert cfg.num_heads % cfg.num_kv_heads == 0
+    if cfg.is_moe:
+        assert cfg.top_k >= 1 and cfg.num_experts > cfg.top_k
+    assert cfg.padded_vocab >= cfg.vocab_size
+    assert cfg.padded_vocab % 256 == 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch, arch_state):
+    cfg, model, state = arch_state(arch)
+    pipe = TokenPipeline(batch=4, seq=32, vocab=cfg.vocab_size)
+    batch = pipe.get_for(cfg, 0)
+    step = jax.jit(make_train_step(model, TrainConfig()))
+    state1, m1 = step(state, batch)
+    state2, m2 = step(state1, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"]) + 0.5  # not diverging
+    assert int(state2.step) == 2
+    # params actually changed
+    d0 = jax.tree.leaves(state.params)[0]
+    d2 = jax.tree.leaves(state2.params)[0]
+    assert not np.array_equal(np.asarray(d0), np.asarray(d2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_serve_smoke(arch, arch_state):
+    cfg, model, state = arch_state(arch)
+    params = state.params
+    pipe = TokenPipeline(batch=2, seq=32, vocab=cfg.vocab_size)
+    batch = pipe.get_for(cfg, 0)
+    cache = model.init_cache(2, 32)
+    logits, cache = model.prefill(params, batch, cache)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.padded_vocab
+    assert np.isfinite(np.asarray(logits)).all()
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    pos0 = batch["tokens"].shape[1]
+    if cfg.family == "vlm":
+        pos0 += batch["patches"].shape[1]
+    pos0 = min(pos0, 31)
+    logits2, _ = model.decode_step(params, tok, cache,
+                                   jnp.asarray(pos0, jnp.int32))
+    assert logits2.shape == (2, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen2_7b", "xlstm_125m", "hymba_1_5b"])
+def test_prefill_decode_consistency(arch, arch_state):
+    """Decoding token t+1 after a prefill of t tokens must match the
+    training-mode forward at position t (same model, same math)."""
+    cfg, model, state = arch_state(arch)
+    params = state.params
+    pipe = TokenPipeline(batch=1, seq=16, vocab=cfg.vocab_size)
+    tokens = pipe.get(0)["tokens"]
+
+    # full forward over seq: logits at position i predict token i+1
+    from repro.models.transformer import forward_train
+    full = forward_train(params, tokens, cfg, remat="none")
+
+    # prefill on first 15 tokens, then decode the 16th
+    cache = model.init_cache(1, 16)
+    logits_p, cache = model.prefill(params, {"tokens": tokens[:, :15]}, cache)
+    logits_d, _ = model.decode_step(params, tokens[:, 15:16], cache,
+                                    jnp.asarray(15, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits_d[0, 0]), np.asarray(full[0, 15]),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_long_500k_eligibility():
+    eligible = [a for a in ARCH_IDS
+                if get_config(a).supports_long_decode]
+    assert sorted(eligible) == ["hymba_1_5b", "xlstm_125m"]
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288

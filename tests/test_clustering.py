@@ -1,0 +1,70 @@
+"""Complete-linkage clustering vs the scipy oracle + metric tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.cluster.hierarchy import fcluster, linkage
+from scipy.spatial.distance import squareform
+
+from repro.core.hd.clustering import (
+    clustered_spectra_ratio, complete_linkage, incorrect_clustering_ratio,
+    pairwise_distances,
+)
+
+
+def _labels_agree(a: np.ndarray, b: np.ndarray) -> bool:
+    """Same partition up to label permutation."""
+    pairs_a = a[:, None] == a[None, :]
+    pairs_b = b[:, None] == b[None, :]
+    return bool((pairs_a == pairs_b).all())
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("n", [8, 20, 40])
+def test_matches_scipy_complete_linkage(seed, n):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, 4))
+    d = np.sqrt(((pts[:, None] - pts[None, :]) ** 2).sum(-1))
+    thr = np.median(d) * 0.7
+
+    res = complete_linkage(jnp.asarray(d, jnp.float32), thr)
+    ours = np.asarray(res.labels)
+
+    z = linkage(squareform(d, checks=False), method="complete")
+    ref = fcluster(z, t=thr, criterion="distance")
+    assert _labels_agree(ours, ref)
+
+
+def test_threshold_extremes():
+    rng = np.random.default_rng(0)
+    d = rng.uniform(1, 2, (10, 10))
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0)
+    all_merge = complete_linkage(jnp.asarray(d, jnp.float32), 100.0)
+    assert int(all_merge.num_clusters) == 1
+    none_merge = complete_linkage(jnp.asarray(d, jnp.float32), 0.5)
+    assert int(none_merge.num_clusters) == 10
+
+
+def test_pairwise_distance_properties():
+    rng = np.random.default_rng(1)
+    hv = jnp.asarray(rng.choice([-1, 1], (12, 256)).astype(np.int8))
+    d = np.asarray(pairwise_distances(hv))
+    assert np.allclose(d, d.T)
+    assert np.allclose(np.diag(d), 0)
+    assert (d >= 0).all()
+    # identical vectors at distance 0
+    hv2 = jnp.concatenate([hv[:1], hv[:1]], 0)
+    d2 = np.asarray(pairwise_distances(hv2))
+    assert d2[0, 1] == 0
+
+
+def test_quality_metrics():
+    labels = jnp.asarray([0, 0, 2, 2, 4, 5], jnp.int32)
+    assert float(clustered_spectra_ratio(labels)) == pytest.approx(4 / 6)
+    truth_good = jnp.asarray([1, 1, 2, 2, 3, 4], jnp.int32)
+    assert float(incorrect_clustering_ratio(labels, truth_good)) == 0.0
+    truth_bad = jnp.asarray([1, 2, 2, 2, 3, 4], jnp.int32)
+    # cluster {0,1} has mixed truth; exactly one of its members disagrees
+    # with the majority -> 1 wrong out of 4 clustered
+    assert float(incorrect_clustering_ratio(labels, truth_bad)) == pytest.approx(1 / 4)

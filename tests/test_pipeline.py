@@ -1,0 +1,144 @@
+"""End-to-end SpecPCM pipeline behaviour tests (clustering + DB search)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SpecPCMConfig, run_clustering, run_db_search
+from repro.spectra import SyntheticMSConfig, generate_dataset
+from repro.spectra.fdr import fdr_filter, make_decoys
+from repro.spectra.preprocess import (
+    bin_spectra, bucket_by_precursor, candidate_window_mask, sqrt_normalize,
+)
+from repro.spectra.synthetic import generate_query_set
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate_dataset(SyntheticMSConfig(
+        num_identities=24, spectra_per_identity=8, num_bins=1024))
+
+
+@pytest.fixture(scope="module")
+def refs(ds):
+    t = ds.templates
+    return t / jnp.maximum(t.max(1, keepdims=True), 1e-6)
+
+
+@pytest.fixture(scope="module")
+def ref_prec(ds):
+    return jnp.asarray(np.asarray(ds.precursor)[::8])
+
+
+class TestClusteringPipeline:
+    def test_clusters_replicates(self, ds):
+        cfg = SpecPCMConfig(hd_dim=1026, mlc_bits=3, num_levels=16)
+        rep = run_clustering(ds.spectra, ds.precursor, ds.identity, cfg)
+        assert rep.clustered_ratio > 0.8
+        assert rep.incorrect_ratio < 0.05
+        assert rep.cost.latency_s > 0 and rep.cost.energy_j > 0
+
+    def test_slc_quality_geq_mlc3(self, ds):
+        """Fig. 9 trend: SLC >= MLC3 clustered-spectra ratio (at the same
+        low incorrect ratio)."""
+        slc = run_clustering(ds.spectra, ds.precursor, ds.identity,
+                             SpecPCMConfig(hd_dim=1024, mlc_bits=1,
+                                           num_levels=16))
+        mlc = run_clustering(ds.spectra, ds.precursor, ds.identity,
+                             SpecPCMConfig(hd_dim=1026, mlc_bits=3,
+                                           num_levels=16))
+        assert slc.clustered_ratio >= mlc.clustered_ratio - 0.05
+        assert slc.incorrect_ratio < 0.05 and mlc.incorrect_ratio < 0.05
+
+    def test_ideal_vs_noisy(self, ds):
+        ideal = run_clustering(ds.spectra, ds.precursor, ds.identity,
+                               SpecPCMConfig(hd_dim=1026, mlc_bits=3,
+                                             num_levels=16, ideal=True))
+        assert ideal.clustered_ratio > 0.8
+
+
+class TestDBSearchPipeline:
+    def test_identifies_peptides_at_fdr(self, ds, refs, ref_prec):
+        cfg = SpecPCMConfig(hd_dim=1026, mlc_bits=3, num_levels=16)
+        q = generate_query_set(ds, SyntheticMSConfig(
+            num_identities=24, spectra_per_identity=8, num_bins=1024), 48)
+        rep = run_db_search(q.spectra, q.precursor, refs, ref_prec, cfg,
+                            query_identity=q.identity,
+                            ref_identity=jnp.arange(24))
+        assert rep.num_identified > 0.5 * q.spectra.shape[0]
+        assert rep.recall > 0.5
+        assert rep.cost.latency_s > 0
+
+    def test_dimension_hurts_when_tiny(self, ds, refs, ref_prec):
+        """Fig. S4 trend: very small HD dim degrades identification."""
+        q = generate_query_set(ds, SyntheticMSConfig(
+            num_identities=24, spectra_per_identity=8, num_bins=1024), 48)
+
+        def mk(d):
+            return run_db_search(
+                q.spectra, q.precursor, refs, ref_prec,
+                SpecPCMConfig(hd_dim=d, mlc_bits=3, num_levels=16),
+                query_identity=q.identity, ref_identity=jnp.arange(24))
+
+        small, large = mk(96), mk(2049)
+        assert large.recall >= small.recall
+
+
+class TestFDR:
+    def test_fdr_filter_controls_rate(self):
+        rng = np.random.default_rng(0)
+        n = 2000
+        # targets score high, decoys low, with overlap
+        is_target = rng.uniform(size=n) < 0.7
+        scores = np.where(is_target, rng.normal(5, 2, n), rng.normal(0, 2, n))
+        accept = np.asarray(fdr_filter(jnp.asarray(scores),
+                                       jnp.asarray(is_target), fdr=0.01))
+        assert accept.sum() > 0
+        assert not (accept & ~is_target).any()  # only targets accepted
+        # the achieved decoy rate above the implied threshold is near 1%
+        thr = scores[accept].min()
+        n_dec_above = ((~is_target) & (scores >= thr)).sum()
+        n_tgt_above = (is_target & (scores >= thr)).sum()
+        assert n_dec_above / max(n_tgt_above, 1) <= 0.02
+
+    def test_decoys_are_reversed(self):
+        s = jnp.asarray(np.random.default_rng(1).uniform(0, 1, (3, 8)))
+        d = make_decoys(s)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(s)[:, ::-1])
+
+
+class TestPreprocess:
+    def test_bin_spectra(self):
+        mz = jnp.asarray([[300.0, 500.0, 1999.0], [200.0, 200.1, 1000.0]])
+        inten = jnp.asarray([[1.0, 0.5, 0.2], [0.3, 0.9, 0.6]])
+        out = bin_spectra(mz, inten, num_bins=64)
+        assert out.shape == (2, 64)
+        assert float(out.max()) == 1.0
+        assert (np.asarray(out) >= 0).all()
+
+    def test_sqrt_normalize(self):
+        x = jnp.asarray([[0.0, 0.25, 1.0]])
+        out = np.asarray(sqrt_normalize(x))
+        assert out[0, 2] == pytest.approx(1.0)
+        assert out[0, 1] == pytest.approx(0.5)
+
+    def test_bucketing_partitions(self):
+        prec = np.asarray([400., 401., 500., 502., 900.])
+        buckets = bucket_by_precursor(prec, bucket_width=50.0)
+        all_idx = np.sort(np.concatenate(buckets))
+        np.testing.assert_array_equal(all_idx, np.arange(5))
+        # nearby masses share a bucket
+        b_of = {i: bi for bi, b in enumerate(buckets) for i in b}
+        assert b_of[0] == b_of[1] and b_of[2] == b_of[3]
+        assert b_of[0] != b_of[4]
+
+    def test_candidate_window_open_search(self):
+        qp = jnp.asarray([500.0])
+        rp = jnp.asarray([480.0, 495.0, 510.0, 690.0, 710.0])
+        open_m = np.asarray(candidate_window_mask(qp, rp, tol=20.,
+                                                  open_search=True,
+                                                  open_tol=200.))
+        closed_m = np.asarray(candidate_window_mask(qp, rp, tol=20.,
+                                                    open_search=False))
+        np.testing.assert_array_equal(open_m[0], [False, True, True, True, False])
+        np.testing.assert_array_equal(closed_m[0], [False, True, True, False, False])

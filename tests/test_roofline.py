@@ -1,0 +1,153 @@
+"""Roofline parser unit tests (HLO collective-bytes extraction)."""
+
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, RooflineReport, collective_bytes,
+)
+
+HLO_FLAT = """
+HloModule jit_f, entry_computation_layout={(f32[16,64]{1,0})->f32[16,64]{1,0}}
+
+%add.clone (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%x, %y)
+}
+
+ENTRY %main (p0: f32[16,64]) -> f32[16,64] {
+  %p0 = f32[16,64]{1,0} parameter(0)
+  %dot = f32[16,64]{1,0} dot(%p0, %p0)
+  ROOT %all-reduce = f32[16,64]{1,0} all-reduce(%dot), replica_groups=[2,4]<=[8], to_apply=%add.clone
+}
+"""
+
+HLO_WHILE = """
+HloModule jit_g
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %a = f32[] add(%x, %y)
+}
+
+%cond (s: (s32[], f32[8,8])) -> pred[] {
+  %s = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (s: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %s = (s32[], f32[8,8]{1,0}) parameter(0)
+  %x = f32[8,8]{1,0} get-tuple-element(%s), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%x), to_apply=%add
+  %i = s32[] get-tuple-element(%s), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ip, %ar)
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %init = (s32[], f32[8,8]{1,0}) tuple(s32[] constant(0), %p0)
+  %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_flat_all_reduce_counted_once():
+    out = collective_bytes(HLO_FLAT)
+    assert out["all-reduce"] == 16 * 64 * 4
+    assert out["all-gather"] == 0
+
+
+def test_while_body_multiplied_by_trip_count():
+    out = collective_bytes(HLO_WHILE)
+    assert out["all-reduce"] == 5 * 8 * 8 * 4
+
+
+def test_inline_operand_types_preferred():
+    hlo = """
+ENTRY %main () -> f32[4] {
+  %x = f32[4]{0} parameter(0)
+  ROOT %ag = f32[16]{0} all-gather(f32[4]{0} %x), dimensions={0}
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16  # operand bytes (4 f32), not result (16 f32)
+
+
+def test_async_pairs_counted_once():
+    hlo = """
+ENTRY %main () -> f32[4] {
+  %x = f32[4]{0} parameter(0)
+  %s = f32[4]{0} all-reduce-start(%x), to_apply=%add
+  ROOT %d = f32[4]{0} all-reduce-done(%s)
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 16
+
+
+def test_roofline_report_terms():
+    r = RooflineReport(
+        flops=PEAK_FLOPS, hbm_bytes=HBM_BW / 2, coll_bytes=ICI_BW / 4,
+        coll_breakdown={}, chips=4, t_compute=1.0, t_memory=0.5,
+        t_collective=0.25, bottleneck="compute", model_flops=PEAK_FLOPS * 2)
+    assert r.step_time_lower_bound == 1.0
+    assert r.mfu_bound == pytest.approx(0.5)
+
+
+def test_model_flops_estimate_orders():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.roofline import model_flops_estimate
+    cfg = get_config("qwen2_7b")
+    train = model_flops_estimate(cfg, SHAPES["train_4k"])
+    decode = model_flops_estimate(cfg, SHAPES["decode_32k"])
+    # ~7.1B active params x 6 x 1.05M tokens -> ~4.5e16 model flops
+    assert 1e16 < train < 1e17
+    assert decode < train / 1e3
+
+
+class TestExecCost:
+    def test_scan_multiplies_flops(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.launch.roofline import exec_cost
+
+        def one(x, w):
+            return x @ w
+
+        def scanned(x, w):
+            def body(c, _):
+                return c @ w, None
+            out, _ = jax.lax.scan(body, x, None, length=10)
+            return out
+
+        xs = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        f1, _ = exec_cost(jax.jit(one).lower(xs, ws).compile().as_text())
+        f10, _ = exec_cost(jax.jit(scanned).lower(xs, ws).compile().as_text())
+        assert f1 == pytest.approx(2 * 256**3, rel=0.01)
+        assert f10 == pytest.approx(10 * f1, rel=0.01)
+
+    def test_dus_counts_update_not_buffer(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.launch.roofline import exec_cost
+
+        def f(buf, upd):
+            def body(b, i):
+                return jax.lax.dynamic_update_index_in_dim(b, upd, i, 0), None
+            out, _ = jax.lax.scan(body, buf, jnp.arange(64))
+            return out
+
+        buf = jax.ShapeDtypeStruct((64, 1024, 1024), jnp.float32)
+        upd = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+        _, b = exec_cost(jax.jit(f).lower(buf, upd).compile().as_text())
+        buffer_bytes = 64 * 1024 * 1024 * 4
+        # traffic must scale with 64 updates x slice, NOT 64 x full buffer
+        assert b < 10 * buffer_bytes

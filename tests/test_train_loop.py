@@ -1,0 +1,146 @@
+"""End-to-end trainer behaviour: loss goes down, checkpoint resume is exact,
+microbatching is consistent, IMC-linear trains."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline, synthetic_batch
+from repro.models import build_model
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, schedule
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2_7b").reduced()
+    model = build_model(cfg)
+    pipe = TokenPipeline(batch=8, seq=64, vocab=cfg.vocab_size)
+    return cfg, model, pipe
+
+
+def _run(model, pipe, cfg, tcfg, steps, state=None, start=0):
+    if state is None:
+        state, _ = init_train_state(model, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    losses = []
+    for s in range(start, steps):
+        state, m = step_fn(state, pipe.get_for(cfg, s))
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_loss_decreases(setup):
+    cfg, model, pipe = setup
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=2,
+                                             total_steps=30))
+    _, losses = _run(model, pipe, cfg, tcfg, 30)
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_microbatch_equivalence(setup):
+    """4 microbatches must give (nearly) the same step as one big batch."""
+    cfg, model, pipe = setup
+    t1 = TrainConfig(optimizer=AdamWConfig(lr=1e-3))
+    t4 = TrainConfig(optimizer=AdamWConfig(lr=1e-3), microbatches=4)
+    s1, _ = _run(model, pipe, cfg, t1, 2)
+    s4, _ = _run(model, pipe, cfg, t4, 2)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s4.params)):
+        np.testing.assert_allclose(np.asarray(a, dtype=np.float32),
+                                   np.asarray(b, dtype=np.float32),
+                                   rtol=2e-3, atol=2e-5)
+
+
+def test_cast_params_bf16_close_to_fp32(setup):
+    cfg, model, pipe = setup
+    t_fp = TrainConfig(optimizer=AdamWConfig(lr=1e-3))
+    t_bf = TrainConfig(optimizer=AdamWConfig(lr=1e-3), cast_params_bf16=True)
+    _, l_fp = _run(model, pipe, cfg, t_fp, 5)
+    _, l_bf = _run(model, pipe, cfg, t_bf, 5)
+    assert abs(l_fp[-1] - l_bf[-1]) < 0.1
+
+
+def test_checkpoint_resume_exact(tmp_path, setup):
+    """Train 6 steps straight vs 3 + save + restore + 3: identical params."""
+    from repro.dist.checkpoint import CheckpointManager
+    cfg, model, pipe = setup
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3))
+
+    state_a, _ = _run(model, pipe, cfg, tcfg, 6)
+
+    state_b, _ = _run(model, pipe, cfg, tcfg, 3)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, state_b)
+    restored_step, state_c = mgr.restore_latest(state_b)
+    assert restored_step == 3
+    state_c, _ = _run(model, pipe, cfg, tcfg, 6, state=state_c, start=3)
+
+    for a, b in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(state_c.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_imc_linear_trains(setup):
+    """The paper's IMC-routed FFN down-projection must train stably."""
+    import dataclasses
+    cfg, model, pipe = setup
+    cfg_imc = dataclasses.replace(cfg, imc_linear=True)
+    model_imc = build_model(cfg_imc)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=2,
+                                             total_steps=20))
+    _, losses = _run(model_imc, pipe, cfg_imc, tcfg, 20)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] - 0.2
+
+
+def test_grad_compression_trains(setup):
+    cfg, model, pipe = setup
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=2,
+                                             total_steps=15),
+                       grad_compression="int8")
+    _, losses = _run(model, pipe, cfg, tcfg, 15)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] - 0.1
+
+
+class TestOptimizer:
+    def test_schedule_warmup_and_decay(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+        assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+
+    def test_clip_norm(self):
+        cfg = AdamWConfig(lr=0.0, clip_norm=1.0, weight_decay=0.0)
+        params = {"w": jnp.ones((4,))}
+        st = adamw_init(params)
+        huge = {"w": jnp.full((4,), 1e6)}
+        _, _, metrics = adamw_update(cfg, params, huge, st)
+        assert float(metrics["grad_norm"]) == pytest.approx(2e6)
+
+    def test_weight_decay_shrinks(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=1.0, warmup_steps=0,
+                          total_steps=10)
+        params = {"w": jnp.ones((4,))}
+        st = adamw_init(params)
+        zero = {"w": jnp.zeros((4,))}
+        new, _, _ = adamw_update(cfg, params, zero, st)
+        assert float(new["w"][0]) < 1.0
+
+
+def test_synthetic_batch_deterministic():
+    a = synthetic_batch(jnp.asarray(3), 4, 16, 1000)["tokens"]
+    b = synthetic_batch(jnp.asarray(3), 4, 16, 1000)["tokens"]
+    c = synthetic_batch(jnp.asarray(4), 4, 16, 1000)["tokens"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert int(a.max()) < 1000 and int(a.min()) >= 0
+
+
+def test_synthetic_batch_zipf_skew():
+    t = np.asarray(synthetic_batch(jnp.asarray(0), 64, 256, 10_000)["tokens"])
+    # cubed-uniform transform concentrates mass at small ids
+    assert (t < 1250).mean() > 0.45
