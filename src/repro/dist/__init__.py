@@ -1,0 +1,35 @@
+"""Distribution substrate: logical-axis sharding, elastic checkpointing,
+gradient compression, collective-matmul kernels, and straggler handling.
+
+The sharding model (``repro.dist.sharding``) is logical-axis based: model
+code never names mesh axes. Layers annotate params and activations with
+*logical* names — ``batch``, ``heads``, ``ff``, ``experts``, ``fsdp``,
+``seq_shard``, ... — and a :class:`~repro.dist.sharding.ShardingRules`
+table maps each logical name to zero or more *mesh* axes (``pod``,
+``data``, ``model``). ``logical_to_spec`` resolves a tuple of logical
+names against a concrete mesh into a ``PartitionSpec`` with three
+degradation guarantees so one model definition runs on every mesh from a
+1-CPU debug host to the 512-chip multi-pod production mesh:
+
+  * **missing mesh axes degrade** — a rule naming ``('pod', 'data')``
+    silently drops ``pod`` on a single-pod mesh;
+  * **indivisible dims replicate** — a dim not divisible by the mapped
+    mesh-axis product falls back to replication rather than erroring;
+  * **each mesh axis is used once** — when two tensor dims map to the
+    same mesh axis, the later dim replicates (no illegal double-use).
+
+``set_mesh``/``constrain`` give layer code a zero-argument way to apply
+sharding constraints: with no mesh set (unit tests, single-device runs)
+``constrain`` is the identity, so the same layer code is testable on CPU
+and sharded in production. The remaining modules build on this substrate:
+
+  * ``checkpoint`` — atomic step directories, keep-N GC, async save, and
+    elastic reshard-on-load (restore into *different* shardings);
+  * ``compression`` — stochastic-rounding int8 and error-feedback top-k
+    gradient compression plus a compressed cross-pod all-reduce;
+  * ``collective_matmul`` — ring reduce / pipelined all-gather matmuls
+    that overlap collective steps with compute;
+  * ``straggler`` — EWMA step-time spike detection and host heartbeats.
+"""
+
+from repro.dist import checkpoint, collective_matmul, compression, sharding, straggler  # noqa: F401

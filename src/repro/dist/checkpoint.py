@@ -1,0 +1,208 @@
+"""Filesystem checkpointing: atomic step directories, keep-N GC, async
+save, integrity validation, and elastic reshard-on-load.
+
+Layout (one directory per step, renamed into place atomically):
+
+    <dir>/step_00000042/arrays.npz   # leaves, insertion order
+    <dir>/step_00000042/meta.json    # treedef repr, leaf shapes/dtypes, crc
+
+A torn write only ever leaves a ``step_XXXXXXXX.tmp-*`` directory behind,
+which ``list_steps`` ignores. ``restore_latest`` walks steps newest-first
+and skips any checkpoint whose CRC or structure does not validate, so a
+corrupt newest step degrades to the previous one instead of failing the
+job. Passing ``shardings=`` to restore device_puts each leaf into the
+given (possibly different-mesh) layout — the elastic resume path.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import shutil
+import threading
+import uuid
+import zlib
+from concurrent.futures import Future, ThreadPoolExecutor
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+# numpy-native dtypes serialize directly; anything else (bf16, fp8) is
+# stored as a uint8 byte view and re-viewed on load.
+_NATIVE_KINDS = "biufc"
+
+
+def _encode_leaf(x) -> tuple[np.ndarray, dict]:
+    arr = np.asarray(jax.device_get(x))
+    if not arr.flags["C_CONTIGUOUS"]:
+        arr = np.ascontiguousarray(arr)
+        arr = arr.reshape(np.shape(x))  # ascontiguousarray promotes 0-d
+    meta = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    if arr.dtype.kind not in _NATIVE_KINDS or arr.dtype.str.startswith("|V"):
+        arr = arr.view(np.uint8)
+        meta["raw"] = True
+    return arr, meta
+
+
+def _decode_leaf(arr: np.ndarray, meta: dict) -> jnp.ndarray:
+    if meta.get("raw"):
+        arr = arr.view(jnp.dtype(meta["dtype"])).reshape(meta["shape"])
+    return jnp.asarray(arr)
+
+
+class CheckpointManager:
+    """Save/restore pytrees of arrays under a root directory.
+
+    ``keep=N`` garbage-collects all but the newest N steps after each
+    save; ``keep=None`` keeps everything. ``save_async`` runs saves on a
+    single background thread (serialized, so concurrent calls cannot
+    interleave GC with a rename); ``wait()`` drains and re-raises.
+    """
+
+    def __init__(self, directory, keep: int | None = None):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._lock = threading.Lock()
+        # created eagerly: lazy creation would be a check-then-set race
+        # under concurrent first save_async calls (no thread is spawned
+        # until the first submit)
+        self._executor = ThreadPoolExecutor(max_workers=1,
+                                            thread_name_prefix="ckpt")
+        self._futures: list[Future] = []
+
+    # -- listing / validation ------------------------------------------------
+
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def list_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            m = _STEP_RE.match(p.name)
+            if m and p.is_dir():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def validate(self, step: int) -> bool:
+        """True iff the checkpoint's files parse and the arrays CRC
+        matches what was recorded at save time."""
+        d = self._step_dir(step)
+        try:
+            meta = json.loads((d / "meta.json").read_text())
+            blob = (d / "arrays.npz").read_bytes()
+            if zlib.crc32(blob) != meta["crc32"]:
+                return False
+            with np.load(d / "arrays.npz") as z:
+                return len(z.files) == len(meta["leaves"])
+        except Exception:
+            return False
+
+    # -- save ----------------------------------------------------------------
+
+    def save(self, step: int, tree) -> None:
+        self._write(step, *self._snapshot(tree))
+
+    def _snapshot(self, tree):
+        """Materialize the tree on host. MUST run in the caller's thread:
+        trainers jit with donated arguments, so the device buffers may be
+        invalidated by the very next step — the host copy is the only
+        consistent snapshot an async save can rely on."""
+        leaves, treedef = jax.tree.flatten(tree)
+        return [_encode_leaf(l) for l in leaves], treedef
+
+    def _write(self, step: int, encoded, treedef) -> None:
+        meta = {
+            "step": step,
+            "structure": str(treedef),
+            "leaves": [m for _, m in encoded],
+        }
+        with self._lock:
+            tmp = self.dir / f"step_{step:08d}.tmp-{uuid.uuid4().hex[:8]}"
+            tmp.mkdir(parents=True)
+            try:
+                np.savez(tmp / "arrays.npz",
+                         **{f"leaf_{i:05d}": a for i, (a, _) in enumerate(encoded)})
+                meta["crc32"] = zlib.crc32((tmp / "arrays.npz").read_bytes())
+                (tmp / "meta.json").write_text(json.dumps(meta))
+                final = self._step_dir(step)
+                if final.exists():
+                    shutil.rmtree(final)
+                tmp.rename(final)
+            except BaseException:
+                shutil.rmtree(tmp, ignore_errors=True)
+                raise
+            self._gc()
+
+    def _gc(self) -> None:
+        if self.keep is None:
+            return
+        steps = self.list_steps()
+        for s in steps[:max(len(steps) - self.keep, 0)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def save_async(self, step: int, tree) -> Future:
+        encoded, treedef = self._snapshot(tree)  # sync: see _snapshot
+        fut = self._executor.submit(self._write, step, encoded, treedef)
+        self._futures.append(fut)
+        return fut
+
+    def wait(self) -> None:
+        futs, self._futures = self._futures, []
+        for f in futs:
+            f.result()
+
+    # -- restore -------------------------------------------------------------
+
+    def restore(self, step: int, target, shardings=None):
+        """Load step ``step`` into the structure of ``target``.
+
+        Raises ValueError if the stored pytree structure or leaf
+        shapes/dtypes do not match ``target``. With ``shardings`` (a
+        pytree of NamedShardings mirroring ``target``) every leaf is
+        device_put into that layout — values are layout-independent, so
+        this is the elastic reshard-on-load path.
+        """
+        d = self._step_dir(step)
+        meta = json.loads((d / "meta.json").read_text())
+        t_leaves, treedef = jax.tree.flatten(target)
+        if meta["structure"] != str(treedef):
+            raise ValueError(
+                f"checkpoint step {step} structure mismatch:\n"
+                f"  saved:  {meta['structure']}\n  target: {treedef}")
+        if len(meta["leaves"]) != len(t_leaves):
+            raise ValueError("checkpoint leaf count mismatch")
+        for i, (m, t) in enumerate(zip(meta["leaves"], t_leaves)):
+            tshape = list(np.shape(t))
+            tdtype = str(getattr(t, "dtype", np.asarray(t).dtype))
+            if m["shape"] != tshape:
+                raise ValueError(
+                    f"leaf {i}: saved shape {m['shape']} != target {tshape}")
+            if m["dtype"] != tdtype:
+                raise ValueError(
+                    f"leaf {i}: saved dtype {m['dtype']} != target {tdtype}")
+        with np.load(d / "arrays.npz") as z:
+            leaves = [_decode_leaf(z[f"leaf_{i:05d}"], m)
+                      for i, m in enumerate(meta["leaves"])]
+        out = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            out = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else x,
+                out, shardings)
+        return out
+
+    def restore_latest(self, target, shardings=None):
+        """(step, tree) from the newest checkpoint that validates and
+        matches ``target``'s structure; None if no usable checkpoint."""
+        for step in reversed(self.list_steps()):
+            if not self.validate(step):
+                continue
+            try:
+                return step, self.restore(step, target, shardings)
+            except (ValueError, OSError, KeyError):
+                continue
+        return None

@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules and mesh-global constraint helpers.
+
+See the package docstring (``repro.dist``) for the model. The global
+mesh/rules pair set by ``set_mesh`` is what lets layer code call
+``constrain(x, "batch", None, "heads", None)`` without threading a mesh
+through every function signature; with no mesh set the call is a no-op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# a logical axis maps to: no mesh axis (replicate), one mesh axis, or an
+# ordered preference of mesh axes (all that exist + divide are used)
+Rule = Union[None, str, tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis -> mesh-axis mapping (the GSPMD "logical axis rules"
+    idiom). Field names are the logical axes used by ``repro.models``."""
+
+    batch: Rule = ("pod", "data")      # data-parallel batch dim
+    fsdp: Rule = "data"                # FSDP-sharded param dim
+    heads: Rule = "model"              # attention query heads (TP)
+    kv_heads: Rule = "model"           # attention kv heads (TP)
+    ff: Rule = "model"                 # FFN hidden dim (TP)
+    experts: Rule = "model"            # MoE expert dim (EP)
+    vocab: Rule = "model"              # embedding/unembed vocab dim
+    seq: Rule = None                   # sequence dim (context parallelism)
+    seq_shard: Rule = "model"          # TP sequence-parallel activations
+    kv_seq: Rule = None                # KV-cache sequence dim
+    layer: Rule = None                 # stacked-layer leading dim
+
+    def lookup(self, name: str) -> Rule:
+        return getattr(self, name)
+
+    def replace(self, **kw) -> "ShardingRules":
+        return dataclasses.replace(self, **kw)
+
+
+DEFAULT_RULES = ShardingRules()
+
+RULE_PRESETS = {
+    "default": DEFAULT_RULES,
+    # pure FSDP: no tensor/expert parallelism, weights sharded over 'data'
+    "fsdp_only": ShardingRules(heads=None, kv_heads=None, ff=None,
+                               experts=None, vocab=None, seq_shard=None),
+}
+
+_STATE: dict = {"mesh": None, "rules": DEFAULT_RULES}
+
+
+def set_mesh(mesh: Mesh | None, rules: ShardingRules | None = None) -> None:
+    """Install the process-global mesh (+ optional rules) used by
+    ``constrain``. ``set_mesh(None)`` returns to single-device no-op mode."""
+    _STATE["mesh"] = mesh
+    _STATE["rules"] = rules or DEFAULT_RULES
+
+
+def get_mesh() -> Mesh | None:
+    return _STATE["mesh"]
+
+
+def get_rules() -> ShardingRules:
+    return _STATE["rules"]
+
+
+def baseline_mode() -> bool:
+    """REPRO_BASELINE=1 disables the tuned sharding-constraint placements
+    (perf A/B lever; see models/transformer.py)."""
+    return os.environ.get("REPRO_BASELINE", "0") == "1"
+
+
+def logical_to_spec(axes: tuple, shape: tuple, mesh: Mesh,
+                    rules: ShardingRules | None = None) -> PartitionSpec:
+    """Resolve logical axis names against a mesh into a PartitionSpec.
+
+    Degradation, per dim: mesh axes absent from the mesh are dropped; a
+    mesh axis already consumed by an earlier dim is dropped; a dim not
+    divisible by the accumulated mesh-axis product stops accumulating
+    (possibly at zero axes = replicated).
+    """
+    rules = rules or get_rules()
+    used: set[str] = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        rule = rules.lookup(name) if name else None
+        if rule is None:
+            entries.append(None)
+            continue
+        cands = (rule,) if isinstance(rule, str) else tuple(rule)
+        picked = []
+        prod = 1
+        for c in cands:
+            if c not in mesh.shape or c in used:
+                continue
+            if dim % (prod * mesh.shape[c]) != 0:
+                continue
+            picked.append(c)
+            prod *= mesh.shape[c]
+        used.update(picked)
+        if not picked:
+            entries.append(None)
+        elif len(picked) == 1:
+            entries.append(picked[0])
+        else:
+            entries.append(tuple(picked))
+    return PartitionSpec(*entries)
+
+
+def logical_to_sharding(axes: tuple, shape: tuple, mesh: Mesh,
+                        rules: ShardingRules | None = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, shape, mesh, rules))
+
+
+def _leaf_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh,
+                   rules: ShardingRules | None = None):
+    """Map a pytree of logical-axis tuples + a matching pytree of arrays /
+    ShapeDtypeStructs to a pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda ax, s: logical_to_sharding(ax, tuple(s.shape), mesh, rules),
+        axes_tree, shapes_tree, is_leaf=_leaf_axes)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint against the global mesh; identity when no
+    mesh is set (single-device tests)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    sh = logical_to_sharding(tuple(axes), tuple(x.shape), mesh)
+    return jax.lax.with_sharding_constraint(x, sh)

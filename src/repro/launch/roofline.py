@@ -62,6 +62,20 @@ _CONST_RE = re.compile(r"constant\((\d+)\)")
 _CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _FIRST_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+# one inline-typed operand:  f32[16,64]{1,0} %name   (layout optional)
+_TYPED_OPERAND_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|u4|s8|u8|s16|u16|s32|u32|"
+    r"s64|u64|c64|c128)\[([0-9,]*)\](?:\{[0-9,]*\})?\s+%?([\w.\-]+)")
+
+
+def _parse_operands(operand_str: str) -> list[tuple[str, str, str]]:
+    """[(name, dtype, dims)] for inline-typed operands; dtype/dims are ''
+    when the printer omitted the type (resolve via the symbol table)."""
+    typed = _TYPED_OPERAND_RE.findall(operand_str)
+    if typed:
+        return [(name, dt, dims) for dt, dims, name in typed]
+    return [(tok.strip().lstrip("%"), "", "")
+            for tok in operand_str.split(",") if tok.strip()]
 
 
 def _split_computations(hlo_text: str) -> dict[str, list[str]]:
@@ -119,12 +133,10 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
                 if base.endswith(suffix):
                     base = base[: -len(suffix)]
             if base in _COLLECTIVES and not opname.endswith("-done"):
-                operand_str = rest.split(")")[0]
-                total = _all_shape_bytes(operand_str)
-                if total == 0:
-                    for tok in operand_str.split(","):
-                        tok = tok.strip().lstrip("%")
-                        total += sizes.get(tok, 0)
+                total = 0
+                for oname, odt, odims in _parse_operands(rest.split(")")[0]):
+                    total += (_shape_bytes(odt, odims) if odt
+                              else sizes.get(oname, 0))
                 out[base] += total
             elif base == "while":
                 wm = _WHILE_ATTR_RE.search(line)
@@ -240,11 +252,21 @@ def exec_cost(hlo_text: str) -> tuple[float, float]:
                     for d in sm.group(2).split(","):
                         if d.strip():
                             res_elems *= int(d)
+                # contraction size from the lhs operand: prefer its inline
+                # type (the scheduled printer emits one), fall back to the
+                # symbol table
+                lhs_dims = None
+                ops = _parse_operands(rest.split(")")[0])
+                if ops:
+                    oname, _, odims = ops[0]
+                    if odims:
+                        lhs_dims = [int(d) for d in odims.split(",")
+                                    if d.strip()]
+                    elif oname in shapes:
+                        lhs_dims = shapes[oname][1]
                 k = 1
                 cm = _LHS_CONTRACT_RE.search(line)
-                op0 = _FIRST_OPERAND_RE.search(rest)
-                if cm and op0 and op0.group(1) in shapes:
-                    _, lhs_dims = shapes[op0.group(1)]
+                if cm and lhs_dims is not None:
                     for idx in cm.group(1).split(","):
                         if idx.strip() and int(idx) < len(lhs_dims):
                             k *= lhs_dims[int(idx)]
@@ -252,13 +274,15 @@ def exec_cost(hlo_text: str) -> tuple[float, float]:
             if count_bytes and base not in _SKIP:
                 res_bytes = _all_shape_bytes(result_types)
                 operand_str = rest.split(")")[0]
+                # per-operand bytes (NOT one summed total: the DUS check
+                # below needs to recognize the aliased full buffer among
+                # the operands)
                 op_bytes = []
-                inline = _all_shape_bytes(operand_str)
-                if inline:
-                    op_bytes = [inline]
-                else:
-                    op_bytes = [nbytes(tok.strip().lstrip("%"))
-                                for tok in operand_str.split(",")]
+                for oname, odt, odims in _parse_operands(operand_str):
+                    if odt:
+                        op_bytes.append(_shape_bytes(odt, odims))
+                    else:
+                        op_bytes.append(nbytes(oname))
                 # in-place dynamic-update-slice (bare or fused): traffic is
                 # the UPDATE region (write + read), not the whole — possibly
                 # scan-carried, 100s-of-GB — buffer; likewise dynamic-slice
