@@ -1,0 +1,117 @@
+"""Docs gate for CI: internal markdown links must resolve, doctests must pass.
+
+Two checks, both runnable standalone:
+
+  * link check — every relative link target in the repo's markdown files
+    (root ``*.md`` + ``docs/``) must exist on disk. External schemes
+    (http/https/mailto) and pure in-page anchors are skipped; a
+    ``path#fragment`` link is checked for the path only.
+  * doctests — every module under ``src/repro`` is imported and run
+    through ``doctest.testmod``; modules without examples are free.
+
+Usage:
+  PYTHONPATH=src python scripts/check_docs.py              # both checks
+  PYTHONPATH=src python scripts/check_docs.py --links-only
+  PYTHONPATH=src python scripts/check_docs.py --modules repro.serve.queue
+"""
+
+from __future__ import annotations
+
+import argparse
+import doctest
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — target up to the first unescaped ')' or whitespace
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def markdown_files() -> list[Path]:
+    files = sorted(REPO.glob("*.md"))
+    docs = REPO / "docs"
+    if docs.is_dir():
+        files += sorted(docs.rglob("*.md"))
+    return files
+
+
+def check_links(files: list[Path] | None = None) -> list[str]:
+    """Return one error string per broken relative link."""
+    errors = []
+    for md in files or markdown_files():
+        text = md.read_text()
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for target in _LINK_RE.findall(line):
+                if target.startswith(_EXTERNAL) or target.startswith("#"):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    rel = md.relative_to(REPO)
+                    errors.append(f"{rel}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def repro_modules() -> list[str]:
+    """All importable module names under src/repro."""
+    src = REPO / "src"
+    names = []
+    for py in sorted((src / "repro").rglob("*.py")):
+        rel = py.relative_to(src).with_suffix("")
+        parts = list(rel.parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        names.append(".".join(parts))
+    return sorted(set(names))
+
+
+def run_doctests(modules: list[str] | None = None) -> tuple[int, int]:
+    """Import each module and run its doctests.
+
+    Returns (failed_examples, modules_with_examples).
+    """
+    failed = 0
+    with_examples = 0
+    for name in modules or repro_modules():
+        mod = importlib.import_module(name)
+        result = doctest.testmod(mod, verbose=False)
+        if result.attempted:
+            with_examples += 1
+            print(f"doctest {name}: {result.attempted} example(s), "
+                  f"{result.failed} failure(s)")
+        failed += result.failed
+    return failed, with_examples
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--links-only", action="store_true")
+    ap.add_argument("--modules", nargs="*", default=None,
+                    help="restrict doctests to these modules")
+    args = ap.parse_args(argv)
+
+    files = markdown_files()
+    errors = check_links(files)
+    print(f"link check: {len(files)} markdown file(s), "
+          f"{len(errors)} broken link(s)")
+    for e in errors:
+        print(f"  {e}")
+    rc = 1 if errors else 0
+
+    if not args.links_only:
+        failed, with_examples = run_doctests(args.modules)
+        print(f"doctests: {with_examples} module(s) with examples, "
+              f"{failed} failure(s)")
+        if failed:
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,10 +6,13 @@ from repro.core.hd.encoding import (
 )
 from repro.core.hd.packing import pack_dimensions, unpack_dimensions
 from repro.core.hd.similarity import (
+    bitpack_bipolar,
     dot_similarity,
     hamming_similarity,
+    hamming_similarity_packed,
     top1_search,
     topk_search,
+    topk_search_packed,
 )
 from repro.core.hd.clustering import (
     pairwise_distances,
@@ -24,10 +27,13 @@ __all__ = [
     "encode_batch_reference",
     "pack_dimensions",
     "unpack_dimensions",
+    "bitpack_bipolar",
     "dot_similarity",
     "hamming_similarity",
+    "hamming_similarity_packed",
     "top1_search",
     "topk_search",
+    "topk_search_packed",
     "pairwise_distances",
     "complete_linkage",
     "ClusteringResult",

@@ -7,8 +7,17 @@ issue a partial matmul per step, so the interconnect and the MXU run
 concurrently — the "collective matmul" trick (Wang et al., ASPLOS'23)
 that the roofline cells show is required once ICI time ~= compute time.
 
-Both functions compute exactly ``x @ w`` for any mesh-axis size (size 1
-degrades to a plain local matmul).
+Mesh axes: both kernels ring over a single named axis — ``'model'`` by
+default, the fast-ICI tensor-parallel axis of the production mesh
+(``repro.launch.mesh``). ``ring_matmul_reduce`` shards the contraction
+dim of ``x`` and the rows of ``w`` over it; ``ag_matmul_pipelined``
+shards the rows of ``x`` and the columns of ``w``.
+
+Degradation/fallback: both functions compute exactly ``x @ w`` for any
+mesh-axis size. A size-1 axis degrades to a plain local matmul (the
+ring has zero ppermute steps), and dims not divisible by the axis size
+fall back to the unsharded ``x @ w`` rather than erroring — the same
+replicate-on-indivisibility contract as ``repro.dist.sharding``.
 """
 
 from __future__ import annotations

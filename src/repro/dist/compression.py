@@ -12,6 +12,16 @@ noisier uncompressed SGD instead of accumulating rounding bias. Top-k
 alone silently drops small coordinates forever; ``topk_ef_compress``
 carries the error state so every coordinate is eventually transmitted
 (the EF-SGD invariant: sent + new_err == grads + old_err, exactly).
+
+Mesh axes: ``cross_pod_allreduce`` is the only collective here and sums
+over exactly one named axis — by convention ``'pod'``, the slow DCN hop
+of the multi-pod mesh (``repro.launch.mesh``); the in-graph compressors
+(``compress_tree``, ``topk_ef_compress``) are axis-free and run under
+any sharding. Degradation/fallback: ``method='none'`` short-circuits to
+the identity (resp. a plain psum on the wire path); a size-1 axis makes
+the psum a no-op so the code needs no special case; the shard_map
+closure is lru-cached per (mesh, axis, method, rank) so per-step calls
+never retrace.
 """
 
 from __future__ import annotations

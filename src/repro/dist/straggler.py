@@ -8,6 +8,16 @@ poison its own detection threshold — and escalates WARN -> EVICT after
 ``consecutive_limit`` consecutive slow steps. The trainer reacts to
 EVICT by checkpointing so the job can restart on a reduced/replaced
 host set (see launch/train.py).
+
+Mesh axes: none directly — detection is host-side wall-clock logic, so
+it works identically on any mesh (a straggler on any of 'pod', 'data'
+or 'model' stalls the same synchronous step). Degradation/fallback: the
+monitor only *observes*; until EVICT fires it changes nothing about the
+job, warmup steps always return OK (compile spikes can't trip it), and
+spike samples are excluded from the EWMA so a degraded host cannot
+inflate its own threshold. Heartbeats degrade the same way: a missing
+host is reported, never fenced here — eviction/re-meshing policy lives
+with the trainer and ``CheckpointManager.restore(..., shardings=)``.
 """
 
 from __future__ import annotations

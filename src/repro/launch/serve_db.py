@@ -1,0 +1,127 @@
+"""Sharded DB-search serving launcher.
+
+Builds the debug mesh, HD-encodes a synthetic spectral library (+ decoys),
+shards the bank over the 'model' axis, then streams encoded queries through
+the micro-batching :class:`repro.serve.DBSearchServer` — batching over
+'data' — and reports queries/sec and p50/p95 request latency alongside the
+identification quality at the requested FDR.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve_db --reduced
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SpecPCMConfig, encode_and_pack
+from repro.dist.sharding import set_mesh
+from repro.launch.mesh import make_debug_mesh
+from repro.serve import DBSearchServer, search_with_fdr, shard_database
+from repro.spectra import SyntheticMSConfig, generate_dataset
+from repro.spectra.fdr import make_decoys
+from repro.spectra.synthetic import generate_query_set
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reduced", action="store_true",
+                    help="small sizes for CPU smoke runs")
+    ap.add_argument("--hd-dim", type=int, default=None)
+    ap.add_argument("--identities", type=int, default=None)
+    ap.add_argument("--refs-per-identity", type=int, default=None)
+    ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=None)
+    ap.add_argument("--flush-ms", type=float, default=5.0)
+    ap.add_argument("--fdr", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-pack", action="store_true",
+                    help="disable the bit-packed XOR+popcount shard path")
+    args = ap.parse_args(argv)
+
+    if args.reduced:
+        dim = args.hd_dim or 512
+        n_id = args.identities or 48
+        per_id = args.refs_per_identity or 2
+        n_q = args.queries or 64
+        max_batch = args.max_batch or 16
+        num_bins = 256
+    else:
+        dim = args.hd_dim or 2048
+        n_id = args.identities or 256
+        per_id = args.refs_per_identity or 4
+        n_q = args.queries or 256
+        max_batch = args.max_batch or 32
+        num_bins = 1024
+
+    mesh = make_debug_mesh()
+    set_mesh(mesh)
+    print(f"mesh: {dict(mesh.shape)}")
+
+    ms = SyntheticMSConfig(num_identities=n_id, spectra_per_identity=per_id,
+                           num_bins=num_bins, seed=args.seed)
+    ds = generate_dataset(ms)
+    # SLC (1-bit) encoding keeps the HVs bipolar so the server can take the
+    # bit-packed shard path whenever D % 32 == 0.
+    cfg = SpecPCMConfig(hd_dim=dim, mlc_bits=1, num_levels=16, ideal=True,
+                        seed=args.seed)
+    refs_hv = encode_and_pack(ds.spectra, cfg)
+    decoys_hv = encode_and_pack(make_decoys(ds.spectra), cfg)
+    pack = False if args.no_pack else "auto"
+    db = shard_database(refs_hv, decoys=decoys_hv, mesh=mesh, pack=pack)
+    print(f"bank: {db.num_targets} targets + {db.num_decoys} decoys, D={dim}, "
+          f"{db.num_shards} shard(s) x {db.shard_rows} rows, "
+          f"packed={db.packed}")
+
+    qs = generate_query_set(ds, ms, num_queries=n_q, seed=args.seed + 1)
+    q_hv = np.asarray(encode_and_pack(qs.spectra, cfg))
+    n_q = q_hv.shape[0]
+
+    server = DBSearchServer(db, k=args.k, fdr=args.fdr,
+                            max_batch_size=max_batch,
+                            flush_timeout_s=args.flush_ms / 1e3)
+    # warm the jit cache (search + FDR routing) so latency numbers measure
+    # serving, not compile
+    search_with_fdr(db, jnp.zeros((max_batch, dim), jnp.int8), k=args.k,
+                    fdr=args.fdr)
+
+    rng = np.random.default_rng(args.seed)
+    done = []
+    i = 0
+    while i < n_q:
+        burst = int(rng.integers(1, max_batch + 1))  # bursty arrivals
+        for j in range(i, min(i + burst, n_q)):
+            server.submit(q_hv[j])
+        i += burst
+        done.extend(server.step())
+        if rng.random() < 0.3:  # idle gap: lets the flush timeout fire
+            time.sleep(args.flush_ms / 1e3)
+            done.extend(server.step())
+    done.extend(server.run_until_drained())
+    assert len(done) == n_q, (len(done), n_q)
+
+    ref_ident = np.asarray(ds.identity)
+    q_ident = np.asarray(qs.identity)
+    done.sort(key=lambda r: r.rid)
+    matched = np.asarray([r.result.match for r in done])
+    accepted = matched >= 0
+    correct = accepted & (ref_ident[np.where(accepted, matched, 0)]
+                          == q_ident[: n_q])
+    s = server.summary()
+    print(f"served {s['count']} queries in {s['batches']} micro-batches "
+          f"(mean batch {s['mean_batch']:.1f})")
+    print(f"throughput: {s['qps']:.1f} queries/sec")
+    print(f"latency: p50 {s['p50_ms']:.2f} ms, p95 {s['p95_ms']:.2f} ms, "
+          f"mean {s['mean_ms']:.2f} ms")
+    print(f"identified at {args.fdr:.0%} FDR: {int(accepted.sum())}/{n_q} "
+          f"({int(correct.sum())} correct identity)")
+    return s
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Serving subsystem: sharded, micro-batched DB-search serving.
+
+The paper's headline workload — spectral-library search expressed as
+integer matmuls — is served here at scale by combining the two mesh axes
+of the production topology (see ``repro.launch.mesh``):
+
+  * the packed HD reference database is **sharded over 'model'**
+    (``db_search.shard_database``), each shard computes a local top-k and
+    only ``Q x k`` candidates per shard cross the interconnect for the
+    global merge — never the full ``Q x R`` score matrix;
+  * incoming queries are **batched over 'data'** behind a FIFO
+    micro-batching request queue (``queue.MicroBatchQueue``) that flushes
+    on a max batch size or a flush timeout, with per-request latency
+    accounting.
+
+``db_search.DBSearchServer`` glues both together and routes the merged
+results through target-decoy FDR filtering (``repro.spectra.fdr``).
+``repro.launch.serve_db`` is the runnable entry point.
+"""
+
+from repro.serve.db_search import (
+    DBSearchServer,
+    ShardedDatabase,
+    search_database,
+    search_with_fdr,
+    shard_database,
+    sharded_topk_search,
+)
+from repro.serve.queue import LatencyStats, MicroBatchQueue, Request
+
+__all__ = [
+    "DBSearchServer",
+    "ShardedDatabase",
+    "search_database",
+    "search_with_fdr",
+    "shard_database",
+    "sharded_topk_search",
+    "LatencyStats",
+    "MicroBatchQueue",
+    "Request",
+]

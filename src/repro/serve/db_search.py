@@ -1,0 +1,385 @@
+"""Sharded HD database search: local top-k per shard, global top-k merge.
+
+The reference bank (targets + decoys, bipolar HVs) is sharded row-wise
+over the ``model`` mesh axis; queries are batched over ``data``. Each
+shard scores its ``R/n`` rows — via the bit-packed XOR+popcount path when
+``D % 32 == 0`` (:func:`repro.core.hd.similarity.topk_search_packed`'s
+kernel), else the int matmul — keeps its local ``lax.top_k``, and only
+the ``Q x k`` candidate (index, score) pairs per shard cross the
+interconnect (``all_gather`` over ``model``), never the full ``Q x R``
+score matrix. A second ``lax.top_k`` over the ``Q x (n*k)`` gathered
+candidates produces the global result.
+
+**Bit-identity with the unsharded oracle.** ``lax.top_k`` breaks ties
+toward the lower position. Each shard's local top-k orders tied scores by
+ascending local (hence global) index, and the gather concatenates shard
+blocks in ascending shard-offset order, so within any tied score the
+gathered candidates appear in ascending *global* index order — the merge
+therefore selects exactly the rows the unsharded
+:func:`repro.core.hd.similarity.topk_search` would. A row pruned by its
+shard's local top-k is beaten by k rows of the same shard and so can
+never appear in the global top-k. Ragged banks are padded to equal shard
+sizes and padding columns are masked to ``INT32_MIN`` (strictly below any
+real score, which is bounded by ``-D``).
+
+**Degradation.** With no mesh (or a size-1 ``model`` axis) everything
+falls back to the single-device ``topk_search`` path; a query batch not
+divisible by the ``data`` axis is replicated instead of batch-sharded —
+same contract as ``repro.dist.sharding``.
+
+**FDR routing.** The bank stores decoys *before* targets so that on a
+target/decoy score tie the decoy (lower row) wins the merged top-1 —
+exactly the conservative ``best_target > best_decoy`` competition of
+``repro.core.pipeline.run_db_search`` — and the rank-0 candidate alone
+determines the competition outcome fed to ``repro.spectra.fdr``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hd.similarity import (
+    bitpack_bipolar,
+    dot_similarity,
+    hamming_similarity_packed,
+    topk_search,
+)
+from repro.serve.queue import LatencyStats, MicroBatchQueue, Request
+from repro.spectra.fdr import fdr_filter
+
+_SENTINEL = jnp.iinfo(jnp.int32).min
+
+
+# --------------------------------------------------------------------------
+# per-shard compute + merge (pure; shared by shard_map and the emulated path)
+# --------------------------------------------------------------------------
+
+def _local_scores(queries, refs_local, *, dim: int, packed: bool) -> jax.Array:
+    """(Q, *) x (Rl, *) -> (Q, Rl) int32 dot-product-scale scores."""
+    if packed:
+        # 2 * hamming_sim - dim == <q, r> for bipolar HVs, exactly
+        return 2 * hamming_similarity_packed(queries, refs_local, dim) - dim
+    return dot_similarity(queries, refs_local)
+
+
+def _local_topk(scores, base, k: int, num_rows: int):
+    """Per-shard top-k with padding mask and global index translation.
+
+    base: this shard's first global row (int). Padding columns (global row
+    >= num_rows) are masked to a sentinel below any real score.
+    Returns (vals (Q, k), global_idx (Q, k)).
+    """
+    shard_rows = scores.shape[-1]
+    col = base + jnp.arange(shard_rows, dtype=jnp.int32)
+    scores = jnp.where(col[None, :] < num_rows, scores, _SENTINEL)
+    vals, local_idx = jax.lax.top_k(scores, k)
+    return vals, local_idx.astype(jnp.int32) + base
+
+
+def _merge_topk(cand_vals, cand_idx, k: int):
+    """Global top-k over gathered per-shard candidates (Q, n*k).
+
+    Candidate blocks must be concatenated in ascending shard order so the
+    positional tie-break reproduces the global ascending-index tie-break.
+    Returns (idx (Q, k), vals (Q, k)) — the ``topk_search`` contract.
+    """
+    vals, pos = jax.lax.top_k(cand_vals, k)
+    idx = jnp.take_along_axis(cand_idx, pos, axis=-1)
+    return idx, vals
+
+
+# --------------------------------------------------------------------------
+# sharded database
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedDatabase:
+    """A reference bank prepared for sharded search.
+
+    data holds ``num_shards * shard_rows`` rows (zero-padded past
+    ``num_rows``), bit-packed to uint32 words when ``packed``; rows
+    ``[0, num_decoys)`` are decoys, ``[num_decoys, num_rows)`` targets.
+    """
+
+    data: jax.Array
+    num_rows: int
+    num_decoys: int
+    dim: int
+    shard_rows: int
+    packed: bool
+    mesh: Mesh | None
+    axis: str
+
+    @property
+    def num_targets(self) -> int:
+        return self.num_rows - self.num_decoys
+
+    @property
+    def num_shards(self) -> int:
+        if self.mesh is None or self.axis not in self.mesh.shape:
+            return 1
+        return self.mesh.shape[self.axis]
+
+
+def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
+                   mesh: Mesh | None = None, axis: str = "model",
+                   pack: bool | str = "auto") -> ShardedDatabase:
+    """Build a :class:`ShardedDatabase` from bipolar (R, D) reference HVs.
+
+    decoys: optional (Rd, D) decoy HVs, stored *before* the targets (see
+      module docstring for why the order matters).
+    pack: True / False / "auto" (bit-pack whenever D % 32 == 0).
+    The padded bank is device_put row-sharded over ``axis`` when a mesh
+    with that axis (size > 1) is supplied; otherwise it stays local.
+    """
+    dim = int(refs.shape[-1])
+    num_decoys = 0
+    bank = refs
+    if decoys is not None:
+        if decoys.shape[-1] != dim:
+            raise ValueError(f"decoy dim {decoys.shape[-1]} != ref dim {dim}")
+        num_decoys = int(decoys.shape[0])
+        bank = jnp.concatenate([decoys, refs], axis=0)
+    num_rows = int(bank.shape[0])
+
+    if pack == "auto":
+        packed = dim % 32 == 0
+    else:
+        packed = bool(pack)
+        if packed and dim % 32 != 0:
+            raise ValueError(f"pack=True requires D % 32 == 0, got D={dim}")
+    store = bitpack_bipolar(bank) if packed else bank.astype(jnp.int8)
+
+    n = mesh.shape[axis] if (mesh is not None and axis in mesh.shape) else 1
+    shard_rows = -(-num_rows // n)  # ceil
+    pad_rows = n * shard_rows - num_rows
+    if pad_rows:
+        store = jnp.pad(store, ((0, pad_rows), (0, 0)))
+    if n > 1:
+        store = jax.device_put(store, NamedSharding(mesh, P(axis, None)))
+    return ShardedDatabase(data=store, num_rows=num_rows, num_decoys=num_decoys,
+                           dim=dim, shard_rows=shard_rows, packed=packed,
+                           mesh=mesh if n > 1 else None, axis=axis)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_search_fn(mesh: Mesh, axis: str, shard_rows: int, num_rows: int,
+                       dim: int, packed: bool, k: int, batch_sharded: bool):
+    """Compile the shard_map search for one (db geometry, k, batch) shape."""
+    q_spec = P("data", None) if batch_sharded else P(None, None)
+
+    def body(q, refs_local):
+        base = jax.lax.axis_index(axis).astype(jnp.int32) * shard_rows
+        scores = _local_scores(q, refs_local, dim=dim, packed=packed)
+        vals, gidx = _local_topk(scores, base, k, num_rows)
+        # Q x k per shard on the wire — all_gather concatenates the shard
+        # blocks in ascending axis order (the tie-break invariant).
+        vals_all = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
+        idx_all = jax.lax.all_gather(gidx, axis, axis=1, tiled=True)
+        return _merge_topk(vals_all, idx_all, k)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(q_spec, P(axis, None)),
+        out_specs=(q_spec, q_spec), check_rep=False))
+
+
+def search_database(db: ShardedDatabase, queries: jax.Array, k: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Top-k search of (Q, D) bipolar queries against a sharded bank.
+
+    Returns (indices (Q, k), scores (Q, k)) over global bank rows,
+    bit-identical to ``topk_search(queries, bank)`` on one device.
+    """
+    if k > db.num_rows:
+        raise ValueError(f"k={k} > bank rows {db.num_rows}")
+    if k > db.shard_rows:
+        raise ValueError(
+            f"k={k} exceeds shard_rows={db.shard_rows}; use fewer shards or "
+            f"a smaller k (local top-k needs k candidates per shard)")
+    q = bitpack_bipolar(queries) if db.packed else queries.astype(jnp.int8)
+
+    if db.mesh is None:
+        scores = _local_scores(q, db.data, dim=db.dim, packed=db.packed)
+        vals, gidx = _local_topk(scores, 0, k, db.num_rows)
+        return gidx, vals
+
+    data_n = db.mesh.shape.get("data", 1)
+    batch_sharded = data_n > 1 and queries.shape[0] % data_n == 0
+    fn = _sharded_search_fn(db.mesh, db.axis, db.shard_rows, db.num_rows,
+                            db.dim, db.packed, k, batch_sharded)
+    return fn(q, db.data)
+
+
+def sharded_topk_search(queries: jax.Array, refs: jax.Array, k: int, *,
+                        mesh: Mesh | None = None, axis: str = "model",
+                        num_shards: int | None = None,
+                        pack: bool | str = "auto"
+                        ) -> tuple[jax.Array, jax.Array]:
+    """One-shot sharded top-k (the oracle-comparable entry point).
+
+    With ``mesh``: shard over ``axis`` via shard_map (the serving path).
+    With ``num_shards`` (and no mesh): run the identical local-topk/merge
+    pipeline shard-by-shard on one device — used by tier-1 tests to prove
+    shard-merge correctness without a multi-device runtime.
+    With neither: plain ``topk_search``.
+    """
+    if mesh is not None:
+        db = shard_database(refs, mesh=mesh, axis=axis, pack=pack)
+        return search_database(db, queries, k)
+    if num_shards is None or num_shards <= 1:
+        return topk_search(queries, refs, k)
+
+    db = shard_database(refs, mesh=None, pack=pack)
+    q = bitpack_bipolar(queries) if db.packed else queries.astype(jnp.int8)
+    shard_rows = -(-db.num_rows // num_shards)
+    if k > shard_rows:
+        raise ValueError(f"k={k} > shard_rows={shard_rows}")
+    pad_rows = num_shards * shard_rows - db.num_rows
+    store = jnp.pad(db.data, ((0, pad_rows), (0, 0))) if pad_rows else db.data
+    vals_blocks, idx_blocks = [], []
+    for s in range(num_shards):
+        r_local = store[s * shard_rows:(s + 1) * shard_rows]
+        scores = _local_scores(q, r_local, dim=db.dim, packed=db.packed)
+        vals, gidx = _local_topk(scores, s * shard_rows, k, db.num_rows)
+        vals_blocks.append(vals)
+        idx_blocks.append(gidx)
+    return _merge_topk(jnp.concatenate(vals_blocks, axis=1),
+                       jnp.concatenate(idx_blocks, axis=1), k)
+
+
+# --------------------------------------------------------------------------
+# FDR routing over merged results
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FDRSearchResult:
+    """Batch search output after target-decoy FDR filtering.
+
+    match holds the *target-library* row (bank row minus num_decoys) for
+    accepted queries, -1 otherwise.
+    """
+
+    indices: np.ndarray   # (Q, k) global bank rows
+    scores: np.ndarray    # (Q, k)
+    is_target: np.ndarray  # (Q,) rank-0 candidate is a target
+    accept: np.ndarray    # (Q,) passed FDR
+    match: np.ndarray     # (Q,) accepted target row or -1
+
+
+def fdr_route(db: ShardedDatabase, indices: jax.Array, scores: jax.Array,
+              fdr: float = 0.01) -> FDRSearchResult:
+    """Target-decoy competition + FDR filter over merged top-k results.
+
+    Only rank 0 decides the competition: because decoys precede targets in
+    the bank, a score tie resolves to the decoy — the conservative
+    ``best_target > best_decoy`` convention of ``run_db_search``. The FDR
+    estimate is computed over the queries in this batch (the serving
+    analogue of per-run filtering; callers wanting run-level FDR can
+    re-filter accumulated (score, is_target) pairs).
+    """
+    top_idx = indices[:, 0]
+    top_val = scores[:, 0]
+    is_target = top_idx >= db.num_decoys
+    accept = fdr_filter(top_val.astype(jnp.float32), is_target, fdr=fdr)
+    match = jnp.where(accept & is_target, top_idx - db.num_decoys, -1)
+    return FDRSearchResult(
+        indices=np.asarray(indices), scores=np.asarray(scores),
+        is_target=np.asarray(is_target), accept=np.asarray(accept),
+        match=np.asarray(match))
+
+
+def search_with_fdr(db: ShardedDatabase, queries: jax.Array, k: int,
+                    fdr: float = 0.01) -> FDRSearchResult:
+    """Sharded top-k search + FDR post-filtering in one call."""
+    idx, vals = search_database(db, queries, k)
+    return fdr_route(db, idx, vals, fdr=fdr)
+
+
+# --------------------------------------------------------------------------
+# serving loop
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QueryResult:
+    """Per-request result attached by the server."""
+
+    indices: np.ndarray  # (k,) global bank rows
+    scores: np.ndarray   # (k,)
+    is_target: bool
+    accept: bool
+    match: int           # accepted target-library row or -1
+
+
+class DBSearchServer:
+    """Micro-batched sharded DB-search server (host-side loop).
+
+    Requests carry already-encoded bipolar query HVs (D,). The server
+    flushes the queue per :class:`~repro.serve.queue.MicroBatchQueue`
+    policy, pads every flush to ``max_batch_size`` rows (one jit cache
+    entry regardless of ragged batch sizes; pad rows are sliced off
+    before FDR so they never pollute the estimate), runs the sharded
+    search, routes the merged results through FDR, and stamps
+    per-request latency into :class:`~repro.serve.queue.LatencyStats`.
+    """
+
+    def __init__(self, db: ShardedDatabase, *, k: int = 4, fdr: float = 0.01,
+                 max_batch_size: int = 32, flush_timeout_s: float = 0.01,
+                 clock: Callable[[], float] = time.monotonic):
+        self.db = db
+        self.k = int(k)
+        self.fdr = float(fdr)
+        self.max_batch_size = int(max_batch_size)
+        self.queue = MicroBatchQueue(max_batch_size=max_batch_size,
+                                     flush_timeout_s=flush_timeout_s,
+                                     clock=clock)
+        self.stats = LatencyStats()
+        self._clock = clock
+
+    def submit(self, query_hv) -> int:
+        """Enqueue one encoded query HV (D,); returns the request id."""
+        q = np.asarray(query_hv, dtype=np.int8)
+        if q.shape != (self.db.dim,):
+            raise ValueError(f"query shape {q.shape} != ({self.db.dim},)")
+        return self.queue.submit(q)
+
+    def step(self, force: bool = False) -> list[Request]:
+        """Run at most one micro-batch. Flushes when the queue policy says
+        so, or unconditionally (pending > 0) with ``force`` — used to
+        drain on shutdown. Returns the completed requests (with
+        ``result``/``t_done`` filled), [] when nothing flushed."""
+        if not (self.queue.ready() or (force and len(self.queue))):
+            return []
+        reqs = self.queue.take_batch()
+        n = len(reqs)
+        batch = np.zeros((self.max_batch_size, self.db.dim), np.int8)
+        batch[:n] = np.stack([r.query for r in reqs])
+        idx, vals = search_database(self.db, jnp.asarray(batch), self.k)
+        routed = fdr_route(self.db, idx[:n], vals[:n], fdr=self.fdr)
+        t_done = self._clock()
+        for i, r in enumerate(reqs):
+            r.result = QueryResult(
+                indices=routed.indices[i], scores=routed.scores[i],
+                is_target=bool(routed.is_target[i]),
+                accept=bool(routed.accept[i]), match=int(routed.match[i]))
+            r.t_done = t_done
+        self.stats.record_batch(reqs)
+        return reqs
+
+    def run_until_drained(self) -> list[Request]:
+        """Flush until the queue is empty; returns all completed requests."""
+        done: list[Request] = []
+        while len(self.queue):
+            done.extend(self.step(force=True))
+        return done
+
+    def summary(self) -> dict:
+        return self.stats.summary()

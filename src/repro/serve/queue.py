@@ -1,0 +1,163 @@
+"""FIFO micro-batching request queue with per-request latency accounting.
+
+Serving throughput comes from batching queries over the 'data' mesh axis,
+but requests arrive one at a time. The queue accumulates them and flushes
+a batch when either
+
+  * ``max_batch_size`` requests are pending (throughput bound), or
+  * the oldest pending request has waited ``flush_timeout_s`` (latency
+    bound — a lone request is never stranded).
+
+The clock is injectable so flush-on-timeout is deterministic to test:
+
+>>> now = [0.0]
+>>> q = MicroBatchQueue(max_batch_size=2, flush_timeout_s=1.0,
+...                     clock=lambda: now[0])
+>>> _ = q.submit([0.5]); q.ready()       # one pending, not timed out yet
+False
+>>> now[0] = 1.25
+>>> q.ready()                            # oldest has waited >= 1.0s
+True
+>>> [r.rid for r in q.take_batch()]
+[0]
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight query and its timing record."""
+
+    rid: int
+    query: Any
+    t_submit: float
+    t_done: float | None = None
+    result: Any = None
+
+    @property
+    def latency_s(self) -> float:
+        if self.t_done is None:
+            raise ValueError(f"request {self.rid} not completed yet")
+        return self.t_done - self.t_submit
+
+
+class MicroBatchQueue:
+    """FIFO queue that groups requests into micro-batches.
+
+    ``submit`` never blocks; the serving loop calls ``ready`` /
+    ``take_batch`` (see :class:`repro.serve.db_search.DBSearchServer`).
+    """
+
+    def __init__(self, max_batch_size: int = 32, flush_timeout_s: float = 0.01,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch_size < 1:
+            raise ValueError(f"max_batch_size must be >= 1, got {max_batch_size}")
+        if flush_timeout_s < 0:
+            raise ValueError(f"flush_timeout_s must be >= 0, got {flush_timeout_s}")
+        self.max_batch_size = int(max_batch_size)
+        self.flush_timeout_s = float(flush_timeout_s)
+        self._clock = clock
+        self._pending: collections.deque[Request] = collections.deque()
+        self._next_rid = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, query) -> int:
+        """Enqueue one query; returns its request id (FIFO-ordered)."""
+        req = Request(rid=self._next_rid, query=query, t_submit=self._clock())
+        self._next_rid += 1
+        self._pending.append(req)
+        return req.rid
+
+    def oldest_age_s(self) -> float | None:
+        if not self._pending:
+            return None
+        return self._clock() - self._pending[0].t_submit
+
+    def ready(self) -> bool:
+        """True when a batch should flush: queue full, or oldest timed out."""
+        if len(self._pending) >= self.max_batch_size:
+            return True
+        age = self.oldest_age_s()
+        return age is not None and age >= self.flush_timeout_s
+
+    def time_until_flush(self) -> float | None:
+        """Seconds until the timeout would flush; None when queue is empty,
+        0.0 when already flushable. Lets a serving loop sleep precisely."""
+        if not self._pending:
+            return None
+        if len(self._pending) >= self.max_batch_size:
+            return 0.0
+        return max(0.0, self.flush_timeout_s - self.oldest_age_s())
+
+    def take_batch(self) -> list[Request]:
+        """Pop up to ``max_batch_size`` requests in FIFO order (may be
+        called unconditionally, e.g. to drain on shutdown)."""
+        n = min(len(self._pending), self.max_batch_size)
+        return [self._pending.popleft() for _ in range(n)]
+
+
+class LatencyStats:
+    """Streaming per-request latency + batch-size accounting.
+
+    Counts and timestamps are exact running values; percentiles/means are
+    computed over a bounded sliding window of the most recent ``window``
+    requests, so a long-lived server's memory and ``summary`` cost stay
+    O(window) under sustained traffic.
+    """
+
+    def __init__(self, window: int = 8192):
+        self._latencies: collections.deque[float] = collections.deque(
+            maxlen=window)
+        self._batch_sizes: collections.deque[int] = collections.deque(
+            maxlen=window)
+        self._count = 0
+        self._batches = 0
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+
+    def record_batch(self, requests: list[Request]) -> None:
+        """Record a completed batch (each request must have ``t_done``)."""
+        if not requests:
+            return
+        self._batches += 1
+        self._batch_sizes.append(len(requests))
+        for r in requests:
+            self._count += 1
+            self._latencies.append(r.latency_s)
+            if self._t_first is None or r.t_submit < self._t_first:
+                self._t_first = r.t_submit
+            if self._t_last is None or r.t_done > self._t_last:
+                self._t_last = r.t_done
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    def summary(self) -> dict:
+        """{count, batches, mean_batch, qps, p50_ms, p95_ms, mean_ms} —
+        count/batches/qps over the full history, the rest over the
+        latest ``window`` requests."""
+        if not self._count:
+            return {"count": 0, "batches": 0, "mean_batch": 0.0, "qps": 0.0,
+                    "p50_ms": 0.0, "p95_ms": 0.0, "mean_ms": 0.0}
+        lat = np.asarray(self._latencies)
+        span = max(self._t_last - self._t_first, 1e-9)
+        return {
+            "count": self._count,
+            "batches": self._batches,
+            "mean_batch": float(np.mean(self._batch_sizes)),
+            "qps": float(self._count / span),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p95_ms": float(np.percentile(lat, 95) * 1e3),
+            "mean_ms": float(lat.mean() * 1e3),
+        }

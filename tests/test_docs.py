@@ -1,0 +1,42 @@
+"""Tier-1 slice of the docs CI gate (scripts/check_docs.py): internal
+links in README/docs must resolve and the doctest-bearing modules must
+pass. CI's docs job additionally doctest-sweeps every repro module."""
+
+import importlib.util
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "scripts" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_internal_markdown_links_resolve():
+    cd = _load_check_docs()
+    files = cd.markdown_files()
+    assert any(f.name == "README.md" for f in files)
+    assert any(f.name == "ARCHITECTURE.md" for f in files)
+    assert cd.check_links(files) == []
+
+
+def test_doctest_modules_pass():
+    cd = _load_check_docs()
+    failed, with_examples = cd.run_doctests(
+        ["repro.core.hd.similarity", "repro.serve.queue"])
+    assert failed == 0
+    assert with_examples == 2
+
+
+def test_check_docs_cli_links_only():
+    r = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_docs.py"),
+         "--links-only"],
+        capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr

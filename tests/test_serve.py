@@ -1,0 +1,324 @@
+"""Serving subsystem tests: shard-merge bit-identity vs the unsharded
+oracle (tier-1, emulated shards; slow, real 8-device shard_map), the
+micro-batching queue's flush policies, and FDR routing conventions."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.hd.similarity import bitpack_bipolar, topk_search, topk_search_packed
+from repro.serve import (
+    DBSearchServer,
+    MicroBatchQueue,
+    search_database,
+    search_with_fdr,
+    shard_database,
+    sharded_topk_search,
+)
+from repro.serve.db_search import fdr_route
+from repro.serve.queue import LatencyStats, Request
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _bipolar(rng, shape):
+    return jnp.asarray(rng.choice([-1, 1], size=shape).astype(np.int8))
+
+
+# --------------------------------------------------------------------------
+# shard-merge correctness (tier-1: emulated shards, same local/merge code)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_shards", [2, 4, 8])
+@pytest.mark.parametrize("num_refs,dim", [
+    (61, 32),   # ragged last shard at every shard count, tie-heavy low D
+    (64, 64),   # exact split
+    (37, 48),   # ragged + unpacked-only dim path when pack=False
+])
+def test_sharded_topk_matches_oracle(num_shards, num_refs, dim):
+    rng = np.random.default_rng(num_refs * 100 + dim)
+    refs = _bipolar(rng, (num_refs, dim))
+    queries = _bipolar(rng, (16, dim))
+    k = 5
+    oracle_idx, oracle_vals = topk_search(queries, refs, k)
+    for pack in ("auto", False):
+        idx, vals = sharded_topk_search(queries, refs, k,
+                                        num_shards=num_shards, pack=pack)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(oracle_idx))
+        np.testing.assert_array_equal(np.asarray(vals), np.asarray(oracle_vals))
+
+
+def test_sharded_topk_duplicate_rows_tiebreak():
+    """Duplicated reference rows across shard boundaries force exact score
+    ties; the merge must still pick the same (lowest) indices the oracle
+    does."""
+    rng = np.random.default_rng(7)
+    base = _bipolar(rng, (12, 32))
+    refs = jnp.concatenate([base, base, base], axis=0)  # 36 rows, all tied
+    queries = base[:6]
+    oi, ov = topk_search(queries, refs, 4)
+    for ns in (2, 4, 8):
+        si, sv = sharded_topk_search(queries, refs, 4, num_shards=ns)
+        np.testing.assert_array_equal(np.asarray(si), np.asarray(oi))
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(ov))
+
+
+def test_topk_search_packed_bit_identical():
+    rng = np.random.default_rng(3)
+    refs = _bipolar(rng, (50, 96))
+    queries = _bipolar(rng, (9, 96))
+    oi, ov = topk_search(queries, refs, 6)
+    pi, pv = topk_search_packed(bitpack_bipolar(queries),
+                                bitpack_bipolar(refs), 96, 6)
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(oi))
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(ov))
+
+
+def test_sharded_topk_no_shards_fallback():
+    rng = np.random.default_rng(5)
+    refs = _bipolar(rng, (20, 32))
+    queries = _bipolar(rng, (4, 32))
+    oi, ov = topk_search(queries, refs, 3)
+    for kw in ({}, {"num_shards": 1}):
+        si, sv = sharded_topk_search(queries, refs, 3, **kw)
+        np.testing.assert_array_equal(np.asarray(si), np.asarray(oi))
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(ov))
+
+
+def test_single_device_database_path():
+    rng = np.random.default_rng(11)
+    refs = _bipolar(rng, (30, 64))
+    queries = _bipolar(rng, (5, 64))
+    db = shard_database(refs)
+    idx, vals = search_database(db, queries, 3)
+    oi, ov = topk_search(queries, refs, 3)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(oi))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(ov))
+
+
+def test_k_exceeding_shard_rows_raises():
+    rng = np.random.default_rng(13)
+    refs = _bipolar(rng, (8, 32))
+    queries = _bipolar(rng, (2, 32))
+    with pytest.raises(ValueError, match="shard_rows"):
+        sharded_topk_search(queries, refs, 5, num_shards=4)
+    db = shard_database(refs)
+    with pytest.raises(ValueError, match="bank rows"):
+        search_database(db, queries, 9)
+
+
+# --------------------------------------------------------------------------
+# FDR routing
+# --------------------------------------------------------------------------
+
+def test_fdr_route_accepts_clear_target_hits():
+    rng = np.random.default_rng(17)
+    refs = _bipolar(rng, (40, 128))
+    decoys = _bipolar(rng, (40, 128))
+    db = shard_database(refs, decoys=decoys)
+    res = search_with_fdr(db, refs[:10], k=4, fdr=0.05)
+    # querying exact library rows: every hit is its own row, all accepted
+    np.testing.assert_array_equal(res.match, np.arange(10))
+    assert res.accept.all() and res.is_target.all()
+    # indices are bank rows: targets live after the decoy block
+    assert (res.indices[:, 0] == np.arange(10) + db.num_decoys).all()
+
+
+def test_fdr_route_tie_resolves_to_decoy():
+    """A target/decoy exact score tie must lose the competition (the
+    conservative best_target > best_decoy convention): decoys precede
+    targets in the bank, so the tied decoy wins rank 0."""
+    rng = np.random.default_rng(19)
+    row = _bipolar(rng, (1, 32))
+    refs = jnp.concatenate([row, _bipolar(rng, (5, 32))], axis=0)
+    decoys = jnp.concatenate([row, _bipolar(rng, (5, 32))], axis=0)
+    db = shard_database(refs, decoys=decoys)
+    res = search_with_fdr(db, row, k=3, fdr=1.0)
+    assert not res.is_target[0]
+    assert res.match[0] == -1
+
+
+# --------------------------------------------------------------------------
+# micro-batching queue
+# --------------------------------------------------------------------------
+
+def test_queue_flushes_on_max_batch():
+    now = [0.0]
+    q = MicroBatchQueue(max_batch_size=3, flush_timeout_s=10.0,
+                        clock=lambda: now[0])
+    assert not q.ready()
+    q.submit("a"), q.submit("b")
+    assert not q.ready()                      # 2 < max, nothing timed out
+    q.submit("c")
+    assert q.ready()                          # full batch, no time passed
+    batch = q.take_batch()
+    assert [r.query for r in batch] == ["a", "b", "c"]  # FIFO
+    assert len(q) == 0 and not q.ready()
+
+
+def test_queue_flushes_on_timeout():
+    now = [100.0]
+    q = MicroBatchQueue(max_batch_size=64, flush_timeout_s=0.5,
+                        clock=lambda: now[0])
+    q.submit("only")
+    assert not q.ready()
+    assert q.time_until_flush() == pytest.approx(0.5)
+    now[0] += 0.49
+    assert not q.ready()
+    now[0] += 0.02
+    assert q.ready() and q.time_until_flush() == 0.0
+    assert [r.query for r in q.take_batch()] == ["only"]
+
+
+def test_queue_take_batch_caps_at_max_and_keeps_fifo():
+    q = MicroBatchQueue(max_batch_size=4, flush_timeout_s=0.0)
+    rids = [q.submit(i) for i in range(10)]
+    first = q.take_batch()
+    assert [r.rid for r in first] == rids[:4]
+    assert len(q) == 6
+    assert [r.rid for r in q.take_batch()] == rids[4:8]
+
+
+def test_latency_stats_percentiles():
+    now = [0.0]
+    stats = LatencyStats()
+    reqs = []
+    for i in range(10):
+        reqs.append(Request(rid=i, query=None, t_submit=float(i),
+                            t_done=float(i) + (i + 1) * 0.01))
+    stats.record_batch(reqs)
+    s = stats.summary()
+    assert s["count"] == 10 and s["batches"] == 1
+    assert s["p50_ms"] == pytest.approx(55.0)
+    assert s["p95_ms"] == pytest.approx(95.5)
+    del now
+
+
+def test_latency_stats_bounded_window():
+    stats = LatencyStats(window=4)
+    reqs = [Request(rid=i, query=None, t_submit=float(i),
+                    t_done=float(i) + 0.1 * (i + 1)) for i in range(10)]
+    for r in reqs:
+        stats.record_batch([r])
+    s = stats.summary()
+    assert s["count"] == 10 and s["batches"] == 10  # exact running totals
+    assert len(stats._latencies) == 4               # bounded memory
+    # percentiles over the latest window only (latencies 0.7..1.0)
+    assert s["p50_ms"] == pytest.approx(850.0)
+
+
+# --------------------------------------------------------------------------
+# server loop
+# --------------------------------------------------------------------------
+
+def _make_server(rng, clock, **kw):
+    refs = _bipolar(rng, (24, 64))
+    decoys = _bipolar(rng, (24, 64))
+    db = shard_database(refs, decoys=decoys)
+    return refs, DBSearchServer(db, clock=clock, **kw)
+
+
+def test_server_flush_on_batch_and_timeout():
+    now = [0.0]
+    rng = np.random.default_rng(23)
+    refs, srv = _make_server(rng, lambda: now[0], k=3, fdr=1.0,
+                             max_batch_size=4, flush_timeout_s=1.0)
+    for i in range(3):
+        srv.submit(np.asarray(refs[i]))
+    assert srv.step() == []                   # 3 < max batch, no timeout
+    srv.submit(np.asarray(refs[3]))
+    done = srv.step()                         # flush on max batch
+    assert [r.rid for r in done] == [0, 1, 2, 3]
+    srv.submit(np.asarray(refs[4]))
+    assert srv.step() == []
+    now[0] += 1.5
+    done = srv.step()                         # flush on timeout
+    assert [r.rid for r in done] == [4]
+    assert done[0].latency_s == pytest.approx(1.5)
+
+
+def test_server_padded_batch_matches_direct_search():
+    """A ragged flush (n < max_batch_size) is padded for a single jit
+    signature; results must equal searching exactly those queries."""
+    now = [0.0]
+    rng = np.random.default_rng(29)
+    refs = _bipolar(rng, (32, 64))
+    decoys = _bipolar(rng, (32, 64))
+    db = shard_database(refs, decoys=decoys)
+    srv = DBSearchServer(db, k=4, fdr=0.5, max_batch_size=8,
+                         flush_timeout_s=0.0, clock=lambda: now[0])
+    queries = _bipolar(rng, (3, 64))
+    for q in np.asarray(queries):
+        srv.submit(q)
+    done = srv.run_until_drained()
+    direct = search_with_fdr(db, queries, k=4, fdr=0.5)
+    for i, r in enumerate(done):
+        np.testing.assert_array_equal(r.result.indices, direct.indices[i])
+        np.testing.assert_array_equal(r.result.scores, direct.scores[i])
+        assert r.result.accept == bool(direct.accept[i])
+        assert r.result.match == int(direct.match[i])
+
+
+def test_serve_db_cli_single_device():
+    from repro.launch import serve_db
+    s = serve_db.main(["--reduced", "--hd-dim", "64", "--identities", "8",
+                       "--queries", "16", "--max-batch", "4",
+                       "--k", "2", "--fdr", "0.5"])
+    assert s["count"] > 0 and s["qps"] > 0
+
+
+# --------------------------------------------------------------------------
+# real multi-device shard_map path (slow tier)
+# --------------------------------------------------------------------------
+
+def _run_py(code: str, devices: int = 8, timeout: int = 520):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("JAX_PLATFORMS", None)
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+
+
+@pytest.mark.slow
+def test_sharded_search_bit_identical_on_8_device_mesh():
+    r = _run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.hd.similarity import topk_search
+        from repro.serve import shard_database, search_database
+        rng = np.random.default_rng(1)
+        for model_n in (2, 4, 8):
+            mesh = jax.make_mesh((8 // model_n, model_n), ("data", "model"))
+            for R, D in [(61, 32), (64, 64), (37, 48)]:
+                refs = jnp.asarray(rng.choice([-1, 1], (R, D)).astype(np.int8))
+                q = jnp.asarray(rng.choice([-1, 1], (16, D)).astype(np.int8))
+                oi, ov = topk_search(q, refs, 4)
+                for pack in ([True, False] if D % 32 == 0 else [False]):
+                    db = shard_database(refs, mesh=mesh, pack=pack)
+                    si, sv = search_database(db, q, 4)
+                    assert (np.asarray(si) == np.asarray(oi)).all(), (model_n, R, D, pack)
+                    assert (np.asarray(sv) == np.asarray(ov)).all(), (model_n, R, D, pack)
+        print("SHARDED_TOPK_OK")
+    """)
+    assert "SHARDED_TOPK_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_serve_db_cli_on_8_device_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_db", "--reduced"],
+        capture_output=True, text=True, timeout=520, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "queries/sec" in r.stdout and "p50" in r.stdout, r.stdout
