@@ -10,7 +10,9 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.core.hd.similarity import (
-    bitpack_bipolar, dot_similarity, hamming_similarity_packed,
+    bitpack_bipolar,
+    dot_similarity,
+    hamming_similarity_packed,
 )
 from repro.core.imc.array import ArrayConfig, default_full_scale
 from repro.core.imc.energy import DEFAULT_HW, stripes

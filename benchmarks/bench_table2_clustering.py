@@ -8,9 +8,7 @@ paper's published baseline and SpecPCM numbers.
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core.imc.energy import (
-    DATASETS, PAPER_TABLE2, clustering_cost,
-)
+from repro.core.imc.energy import DATASETS, PAPER_TABLE2, clustering_cost
 
 
 def run() -> None:

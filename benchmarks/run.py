@@ -14,15 +14,15 @@ import traceback
 def main() -> None:
     quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
     from benchmarks import (
-        bench_table2_clustering,
-        bench_table3_dbsearch,
+        bench_dryrun_roofline,
+        bench_fig10_dbsearch_quality,
         bench_fig7_ber,
         bench_fig9_clustering_quality,
-        bench_fig10_dbsearch_quality,
         bench_figS3_tradeoffs,
         bench_figS4S5_hddim,
         bench_kernels,
-        bench_dryrun_roofline,
+        bench_table2_clustering,
+        bench_table3_dbsearch,
     )
 
     suites = [

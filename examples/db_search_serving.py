@@ -1,11 +1,17 @@
-"""Sharded, micro-batched DB-search serving — the deployment-shaped path.
+"""Sharded, cached, multi-tenant DB-search serving — the deployment path.
 
-The reference library (targets + decoys) is HD-encoded once, bit-packed,
-and sharded row-wise over the mesh's 'model' axis; queries stream through
-a FIFO micro-batching queue (flush on max-batch or timeout), are searched
-with a per-shard top-k + global merge that is bit-identical to the
-unsharded oracle, and the merged hits pass target-decoy FDR filtering.
-The modeled SpecPCM chip cost for the same workload is printed alongside.
+Two client libraries (tenants) are HD-encoded and registered in a lazy
+BankRegistry: each reference bank (targets + decoys) is bit-packed and
+sharded row-wise over the mesh's 'model' axis only when its first query
+arrives, and cold banks LRU-evict while pinned (hot) tenants stay
+resident. Queries stream through a tenant-aware micro-batching queue
+(flush on max-batch or timeout, per-flush fairness cap); every query HV
+is encoded once and memoized in a content-hash LRU cache, so the second
+pass over the same stream is served from cache — bit-identical to the
+cold pass. Search itself is the per-shard top-k + global merge that is
+bit-identical to the unsharded oracle, and merged hits pass target-decoy
+FDR filtering. The modeled SpecPCM chip cost for the same workload is
+printed alongside.
 
     PYTHONPATH=src python examples/db_search_serving.py
 """
@@ -17,58 +23,79 @@ from repro.core import SpecPCMConfig, encode_and_pack
 from repro.core.imc.energy import db_search_cost
 from repro.dist.sharding import set_mesh
 from repro.launch.mesh import make_debug_mesh
-from repro.serve import DBSearchServer, search_with_fdr, shard_database
+from repro.serve import BankRegistry, DBSearchServer, search_with_fdr
 from repro.spectra import SyntheticMSConfig, generate_dataset
 from repro.spectra.fdr import make_decoys
 from repro.spectra.synthetic import generate_query_set
 
 
 def main():
-    # 1. reference library: 64 peptides x 2 replicate spectra
-    ms = SyntheticMSConfig(num_identities=64, spectra_per_identity=2,
-                           num_bins=512)
-    ds = generate_dataset(ms)
-    cfg = SpecPCMConfig(hd_dim=1024, mlc_bits=1, num_levels=16, ideal=True)
-
-    # 2. encode targets + decoys and shard the bank over the 'model' axis
+    # 1. two tenant reference libraries: 64 peptides x 2 replicate spectra
     mesh = make_debug_mesh()
     set_mesh(mesh)
-    refs_hv = encode_and_pack(ds.spectra, cfg)
-    decoys_hv = encode_and_pack(make_decoys(ds.spectra), cfg)
-    db = shard_database(refs_hv, decoys=decoys_hv, mesh=mesh)
-    print(f"bank: {db.num_targets} targets + {db.num_decoys} decoys, "
-          f"{db.num_shards} shard(s), bit-packed={db.packed}")
+    cfg = SpecPCMConfig(hd_dim=1024, mlc_bits=1, num_levels=16, ideal=True)
+    registry = BankRegistry(mesh=mesh, max_banks=2)
+    tenants = {}
+    for t, seed in enumerate((0, 1)):
+        ms = SyntheticMSConfig(num_identities=64, spectra_per_identity=2,
+                               num_bins=512, seed=seed)
+        ds = generate_dataset(ms)
+        refs_hv = encode_and_pack(ds.spectra, cfg)
+        decoys_hv = encode_and_pack(make_decoys(ds.spectra), cfg)
+        registry.register(f"lab{t}", refs_hv, decoys=decoys_hv, pin=t == 0)
+        qs = generate_query_set(ds, ms, num_queries=32, seed=seed + 10)
+        tenants[f"lab{t}"] = (ds, qs,
+                              np.asarray(encode_and_pack(qs.spectra, cfg)))
+    print(f"registered {len(registry)} tenant banks (lazy; none built yet: "
+          f"{[registry.is_built(t) for t in registry.tenants()]})")
 
-    # 3. serve a query stream through the micro-batching queue
-    qs = generate_query_set(ds, ms, num_queries=64)
-    q_hv = np.asarray(encode_and_pack(qs.spectra, cfg))
-    server = DBSearchServer(db, k=4, fdr=0.05, max_batch_size=16,
-                            flush_timeout_s=0.005)
-    # warm the jit cache (search + FDR routing) so p50/p95 measure serving,
-    # not the first compile
-    search_with_fdr(db, jnp.zeros((16, cfg.hd_dim), jnp.int8), k=4, fdr=0.05)
+    # 2. the serving stack: micro-batching + query-HV cache + shape buckets
+    server = DBSearchServer(registry, k=4, fdr=0.05, max_batch_size=16,
+                            flush_timeout_s=0.005, cache_bytes=8 << 20,
+                            buckets=3, fairness_cap=8)
+    # warm the hot tenant's jit cache so p50/p95 measure serving, not the
+    # first compile (lab1 pays its lazy build on first request, by design)
+    search_with_fdr(registry.get("lab0"),
+                    jnp.zeros((16, cfg.hd_dim), jnp.int8), k=4, fdr=0.05)
+
+    # 3. two passes over the interleaved query streams: the first pass is
+    # cold (encodes + inserts), the second is served from the cache
     done = []
-    for hv in q_hv:
-        server.submit(hv)
-        done.extend(server.step())     # flushes whenever a batch is ready
+    meta = {}  # rid -> (tenant, query row)
+    for _ in range(2):
+        for i in range(32):
+            for name in tenants:
+                meta[server.submit(tenants[name][2][i], tenant=name)] = (name, i)
+            done.extend(server.step())
     done.extend(server.run_until_drained())
 
     # 4. quality + serving stats
-    ref_ident = np.asarray(ds.identity)
-    q_ident = np.asarray(qs.identity)
-    done.sort(key=lambda r: r.rid)
-    match = np.asarray([r.result.match for r in done])
-    ok = match >= 0
-    correct = ok & (ref_ident[np.where(ok, match, 0)] == q_ident[: len(done)])
+    total = len(done)
+    accepted = correct = 0
+    for r in done:
+        if r.result.match >= 0:
+            accepted += 1
+            ds, qs, _ = tenants[meta[r.rid][0]]
+            correct += int(np.asarray(ds.identity)[r.result.match]
+                           == np.asarray(qs.identity)[meta[r.rid][1]])
     s = server.summary()
     print(f"served {s['count']} queries in {s['batches']} micro-batches: "
           f"{s['qps']:.1f} queries/sec, "
           f"p50 {s['p50_ms']:.1f} ms / p95 {s['p95_ms']:.1f} ms")
-    print(f"identified at 5% FDR: {int(ok.sum())}/{len(done)} "
-          f"({int(correct.sum())} with the correct identity)")
+    qc = s["query_cache"]
+    print(f"query-HV cache: hit rate {qc['hit_rate']:.0%} "
+          f"({qc['hits']} hits / {qc['misses']} misses, "
+          f"{qc['entries']} entries) — pass 2 was served from cache")
+    for name in sorted(s["tenants"]):
+        ts = s["tenants"][name]
+        print(f"  {name}: {ts['count']} reqs, p95 {ts['p95_ms']:.1f} ms, "
+              f"cache hit rate {ts['cache_hit_rate']:.0%}")
+    print(f"identified at 5% FDR: {accepted}/{total} "
+          f"({correct} correct identity)")
 
     # 5. what would the same scan cost on the SpecPCM chip?
-    cost = db_search_cost(num_queries=len(done), num_refs=db.num_rows,
+    db = registry.get("lab0")
+    cost = db_search_cost(num_queries=total, num_refs=db.num_rows,
                           hd_dim=cfg.hd_dim, candidate_fraction=1.0)
     print(f"modeled chip cost for the same scan: {cost.latency_s * 1e6:.1f} us, "
           f"{cost.energy_j * 1e6:.2f} uJ")

@@ -1,0 +1,168 @@
+"""Benchmark-regression gate for CI: machine-readable perf trajectory.
+
+Runs the benchmark orchestrator (``benchmarks/run.py``) under
+``REPRO_BENCH_QUICK=1``, parses its ``name,us_per_call,derived`` CSV rows,
+adds serving metrics (queries/sec, query-HV cache hit rate, p50/p95) from
+a reduced multi-tenant ``repro.launch.serve_db`` run, and writes the
+result as a repo-root ``BENCH_PR3.json`` — the artifact CI uploads so
+every PR leaves a perf data point behind.
+
+If a prior ``BENCH_*.json`` exists at the repo root, timing rows are
+compared against the newest one: a suite that got more than ``--warn-pct``
+slower prints a warning, more than ``--fail-pct`` slower fails the job
+(new/removed suites are reported, never fatal).
+
+Usage:
+  PYTHONPATH=src python scripts/bench_ci.py                # full gate
+  PYTHONPATH=src python scripts/bench_ci.py --skip-serving # suites only
+  PYTHONPATH=src python scripts/bench_ci.py --output /tmp/bench.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_BENCH_NAME_RE = re.compile(r"BENCH_PR(\d+)\.json$")
+
+
+def run_suites() -> list[dict]:
+    """Run benchmarks/run.py quick and parse its CSV rows."""
+    env = dict(os.environ)
+    env["REPRO_BENCH_QUICK"] = "1"
+    # src for the repro package, the repo root for the benchmarks package
+    path = str(REPO / "src") + os.pathsep + str(REPO)
+    if env.get("PYTHONPATH"):
+        path += os.pathsep + env["PYTHONPATH"]
+    env["PYTHONPATH"] = path
+    proc = subprocess.run([sys.executable, str(REPO / "benchmarks" / "run.py")],
+                          capture_output=True, text=True, cwd=REPO, env=env)
+    rows = []
+    for line in proc.stdout.splitlines():
+        if not line.startswith("suite/"):
+            continue
+        name, us, derived = line.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    failed = [r["name"] for r in rows if r["derived"] == "FAILED"]
+    if proc.returncode != 0 or failed or not rows:
+        sys.stderr.write(proc.stdout[-4000:] + proc.stderr[-4000:])
+        raise SystemExit(
+            f"benchmark suites failed (rc={proc.returncode}, "
+            f"failed={failed or 'no rows parsed'})")
+    return rows
+
+
+def serving_metrics() -> dict:
+    """Reduced multi-tenant serve_db run -> queries/sec + cache hit rate."""
+    from repro.launch import serve_db
+    s = serve_db.main([
+        "--reduced", "--hd-dim", "64", "--identities", "8", "--queries", "32",
+        "--max-batch", "8", "--k", "2", "--fdr", "0.5", "--flush-ms", "2",
+        "--tenants", "2", "--cache-mb", "8", "--buckets", "2",
+    ])
+    qc = s["query_cache"] or {}
+    return {
+        "queries_per_sec": s["qps"],
+        "p50_ms": s["p50_ms"],
+        "p95_ms": s["p95_ms"],
+        "cache_hit_rate": qc.get("hit_rate", 0.0),
+        "cache_hits": qc.get("hits", 0),
+        "cache_misses": qc.get("misses", 0),
+        "bank_builds": s["banks"]["builds"],
+        "tenants": len(s["tenants"]),
+    }
+
+
+def find_baseline(output: Path) -> Path | None:
+    """The newest prior BENCH_*.json at the repo root (numeric PR order,
+    then mtime for non-conforming names), excluding the output file."""
+    cands = [p for p in REPO.glob("BENCH_*.json") if p.resolve() != output.resolve()]
+    if not cands:
+        return None
+
+    def order(p: Path):
+        m = _BENCH_NAME_RE.search(p.name)
+        # PR-numbered files outrank non-conforming names at any mtime
+        return (1, int(m.group(1))) if m else (0, p.stat().st_mtime)
+
+    return max(cands, key=order)
+
+
+def compare(baseline: dict, current: list[dict], *, warn_pct: float,
+            fail_pct: float) -> tuple[list[str], list[str]]:
+    """(warnings, failures) from timing-row regressions vs the baseline."""
+    old = {r["name"]: r["us_per_call"] for r in baseline.get("rows", [])}
+    warnings, failures = [], []
+    for row in current:
+        prev = old.get(row["name"])
+        if prev is None:
+            warnings.append(f"{row['name']}: new suite (no baseline)")
+            continue
+        if prev <= 0:
+            continue
+        delta = row["us_per_call"] / prev - 1.0
+        msg = (f"{row['name']}: {prev:.0f} -> {row['us_per_call']:.0f} us "
+               f"({delta:+.1%})")
+        if delta > fail_pct:
+            failures.append(msg)
+        elif delta > warn_pct:
+            warnings.append(msg)
+    for name in sorted(set(old) - {r["name"] for r in current}):
+        warnings.append(f"{name}: suite removed since baseline")
+    return warnings, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--output", type=Path, default=REPO / "BENCH_PR3.json")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="explicit baseline JSON (default: newest prior "
+                         "BENCH_*.json at the repo root)")
+    ap.add_argument("--warn-pct", type=float, default=0.10,
+                    help="warn when a timing row regresses more than this")
+    ap.add_argument("--fail-pct", type=float, default=0.50,
+                    help="fail when a timing row regresses more than this")
+    ap.add_argument("--skip-serving", action="store_true",
+                    help="skip the reduced serve_db run (suites only)")
+    args = ap.parse_args(argv)
+
+    rows = run_suites()
+    result = {
+        "schema": 1,
+        "source": "scripts/bench_ci.py",
+        "quick": True,
+        "rows": rows,
+        "serving": None if args.skip_serving else serving_metrics(),
+    }
+    args.output.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {args.output} ({len(rows)} timing rows"
+          + ("" if args.skip_serving else
+         f", serving {result['serving']['queries_per_sec']:.1f} q/s, "
+         f"cache hit rate {result['serving']['cache_hit_rate']:.1%}") + ")")
+
+    base_path = args.baseline or find_baseline(args.output)
+    if base_path is None:
+        print("no prior BENCH_*.json baseline found; comparison skipped")
+        return 0
+    baseline = json.loads(base_path.read_text())
+    warnings, failures = compare(baseline, rows, warn_pct=args.warn_pct,
+                                 fail_pct=args.fail_pct)
+    print(f"compared against {base_path.name}: "
+          f"{len(failures)} failure(s), {len(warnings)} warning(s)")
+    for w in warnings:
+        print(f"  WARN  {w}")
+    for f in failures:
+        print(f"  FAIL  {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,6 @@
 """Splice the generated roofline table and perf log into EXPERIMENTS.md."""
-import subprocess, sys
+import subprocess
+import sys
 from pathlib import Path
 
 doc = Path('EXPERIMENTS.md').read_text()

@@ -1,5 +1,6 @@
 """Emit the EXPERIMENTS.md roofline table from dry-run artifacts."""
-import json, glob, sys
+import glob
+import json
 
 def fmt(v):
     if v == 0: return "0"

@@ -1,4 +1,4 @@
-from repro.configs.base import ArchConfig, get_config, list_archs, ARCH_IDS
+from repro.configs.base import ARCH_IDS, ArchConfig, get_config, list_archs
 from repro.configs.shapes import SHAPES, ShapeSpec, applicable
 
 __all__ = ["ArchConfig", "get_config", "list_archs", "ARCH_IDS",

@@ -1,13 +1,13 @@
 """SpecPCM core: hyperdimensional computing + PCM in-memory-compute models."""
 
 from repro.core.pipeline import (
+    ClusterReport,
+    SearchReport,
     SpecPCMConfig,
     encode_and_pack,
     imc_scores,
     run_clustering,
     run_db_search,
-    ClusterReport,
-    SearchReport,
 )
 
 __all__ = [

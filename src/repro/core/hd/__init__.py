@@ -1,8 +1,13 @@
+from repro.core.hd.clustering import (
+    ClusteringResult,
+    complete_linkage,
+    pairwise_distances,
+)
 from repro.core.hd.encoding import (
     HDEncoderConfig,
-    make_codebooks,
     encode_batch,
     encode_batch_reference,
+    make_codebooks,
 )
 from repro.core.hd.packing import pack_dimensions, unpack_dimensions
 from repro.core.hd.similarity import (
@@ -13,11 +18,6 @@ from repro.core.hd.similarity import (
     top1_search,
     topk_search,
     topk_search_packed,
-)
-from repro.core.hd.clustering import (
-    pairwise_distances,
-    complete_linkage,
-    ClusteringResult,
 )
 
 __all__ = [

@@ -1,34 +1,34 @@
-from repro.core.imc.device import (
-    PCMMaterial,
-    SB2TE3_GST,
-    TITE2_GST,
-    MATERIALS,
-    DeviceConfig,
-    noise_sigma,
-    bit_error_rate,
-    apply_write_noise,
-)
 from repro.core.imc.array import (
     ArrayConfig,
     IMCArrayState,
-    program_hvs,
-    imc_mvm,
-    imc_mvm_reference,
     adc_quantize,
     dac_quantize,
+    imc_mvm,
+    imc_mvm_reference,
+    program_hvs,
 )
-from repro.core.imc.isa import (
-    Opcode,
-    Instruction,
-    encode_instruction,
-    decode_instruction,
-    ISAExecutor,
+from repro.core.imc.device import (
+    MATERIALS,
+    SB2TE3_GST,
+    TITE2_GST,
+    DeviceConfig,
+    PCMMaterial,
+    apply_write_noise,
+    bit_error_rate,
+    noise_sigma,
 )
 from repro.core.imc.energy import (
-    HardwareModel,
     DEFAULT_HW,
+    HardwareModel,
     clustering_cost,
     db_search_cost,
+)
+from repro.core.imc.isa import (
+    Instruction,
+    ISAExecutor,
+    Opcode,
+    decode_instruction,
+    encode_instruction,
 )
 
 __all__ = [

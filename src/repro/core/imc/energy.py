@@ -37,9 +37,8 @@ cell, which validates the model rather than re-deriving it per dataset.
 from __future__ import annotations
 
 import dataclasses
-import math
 
-from repro.core.imc.device import DeviceConfig, MATERIALS
+from repro.core.imc.device import DeviceConfig
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,8 +30,8 @@ from typing import Iterable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core.imc import energy as energy_mod
 from repro.core.imc.array import (
     ArrayConfig,
     IMCArrayState,
@@ -39,7 +39,6 @@ from repro.core.imc.array import (
     program_hvs,
 )
 from repro.core.imc.device import DeviceConfig
-from repro.core.imc import energy as energy_mod
 
 
 class Opcode(enum.IntEnum):

@@ -22,20 +22,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hd.encoding import HDEncoderConfig, make_codebooks, encode_batch
-from repro.core.hd.packing import pack_dimensions
-from repro.core.hd.similarity import dot_similarity
 from repro.core.hd.clustering import (
-    complete_linkage,
-    pairwise_distances,
     clustered_spectra_ratio,
+    complete_linkage,
     incorrect_clustering_ratio,
 )
+from repro.core.hd.encoding import HDEncoderConfig, encode_batch, make_codebooks
+from repro.core.hd.packing import pack_dimensions
+from repro.core.hd.similarity import dot_similarity
+from repro.core.imc import energy as energy_mod
 from repro.core.imc.array import ArrayConfig, imc_mvm_reference
 from repro.core.imc.device import DeviceConfig, apply_write_noise
-from repro.core.imc import energy as energy_mod
+from repro.spectra.fdr import fdr_filter, make_decoys
 from repro.spectra.preprocess import bucket_by_precursor, candidate_window_mask
-from repro.spectra.fdr import make_decoys, fdr_filter
 
 
 @dataclasses.dataclass(frozen=True)

@@ -32,4 +32,18 @@ and sharded in production. The remaining modules build on this substrate:
   * ``straggler`` — EWMA step-time spike detection and host heartbeats.
 """
 
-from repro.dist import checkpoint, collective_matmul, compression, sharding, straggler  # noqa: F401
+from repro.dist import (
+    checkpoint,
+    collective_matmul,
+    compression,
+    sharding,
+    straggler,
+)
+
+__all__ = [
+    "checkpoint",
+    "collective_matmul",
+    "compression",
+    "sharding",
+    "straggler",
+]

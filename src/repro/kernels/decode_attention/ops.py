@@ -7,9 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.decode_attention import (
-    decode_attention_pallas_call,
-)
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas_call
 
 
 def _default_interpret() -> bool:

@@ -24,18 +24,19 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config, ARCH_IDS
+from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.shapes import applicable
-from repro.dist.sharding import (
-    set_mesh, logical_to_sharding, tree_shardings, get_rules,
-)
+from repro.dist.sharding import logical_to_sharding, set_mesh
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import roofline_from_compiled, model_flops_estimate
+from repro.launch.roofline import model_flops_estimate, roofline_from_compiled
 from repro.models.model_zoo import build_model
-from repro.train.train_step import (
-    TrainConfig, abstract_train_state, make_train_step, state_axes,
-)
 from repro.train.serve_step import make_decode_step, make_prefill
+from repro.train.train_step import (
+    TrainConfig,
+    abstract_train_state,
+    make_train_step,
+    state_axes,
+)
 
 
 def _leaf_axes(x):

@@ -1,13 +1,20 @@
-"""Sharded DB-search serving launcher.
+"""Sharded, multi-tenant DB-search serving launcher.
 
-Builds the debug mesh, HD-encodes a synthetic spectral library (+ decoys),
-shards the bank over the 'model' axis, then streams encoded queries through
-the micro-batching :class:`repro.serve.DBSearchServer` — batching over
-'data' — and reports queries/sec and p50/p95 request latency alongside the
-identification quality at the requested FDR.
+Builds the debug mesh, HD-encodes one synthetic spectral library
+(+ decoys) per tenant, registers them in a lazy
+:class:`~repro.serve.cache.BankRegistry` (banks shard onto the 'model'
+axis on first use; tenant 0 is pinned hot), then streams bursty,
+hot-tenant-skewed queries — drawn with replacement, so repeats hit the
+content-hash :class:`~repro.serve.cache.QueryHVCache` — through the
+micro-batching :class:`~repro.serve.DBSearchServer`, batching over
+'data' with shape-bucketed padding and a per-flush fairness cap. Reports
+queries/sec, aggregate and per-tenant p50/p95 latency, cache hit rate,
+bank builds/evictions, and identification quality at the requested FDR.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_db --reduced
+  PYTHONPATH=src python -m repro.launch.serve_db --reduced --tenants 4 \\
+      --cache-mb 16 --buckets 3 --fairness-cap 8
 """
 
 from __future__ import annotations
@@ -21,7 +28,7 @@ import numpy as np
 from repro.core import SpecPCMConfig, encode_and_pack
 from repro.dist.sharding import set_mesh
 from repro.launch.mesh import make_debug_mesh
-from repro.serve import DBSearchServer, search_with_fdr, shard_database
+from repro.serve import BankRegistry, DBSearchServer, search_with_fdr
 from repro.spectra import SyntheticMSConfig, generate_dataset
 from repro.spectra.fdr import make_decoys
 from repro.spectra.synthetic import generate_query_set
@@ -34,7 +41,8 @@ def main(argv=None):
     ap.add_argument("--hd-dim", type=int, default=None)
     ap.add_argument("--identities", type=int, default=None)
     ap.add_argument("--refs-per-identity", type=int, default=None)
-    ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--queries", type=int, default=None,
+                    help="requests per tenant")
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=None)
     ap.add_argument("--flush-ms", type=float, default=5.0)
@@ -42,8 +50,23 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-pack", action="store_true",
                     help="disable the bit-packed XOR+popcount shard path")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="number of tenant banks (tenant 0 is pinned hot)")
+    ap.add_argument("--cache-mb", type=float, default=64.0,
+                    help="query-HV cache byte budget in MiB (0 disables)")
+    ap.add_argument("--buckets", type=int, default=4,
+                    help="batch-shape buckets (geometric ladder up to "
+                         "--max-batch; 1 = always pad to max)")
+    ap.add_argument("--fairness-cap", type=int, default=None,
+                    help="max requests one tenant may take per flush while "
+                         "others wait (default: no cap)")
+    ap.add_argument("--max-banks", type=int, default=None,
+                    help="LRU-evict cold built banks beyond this many "
+                         "(default: keep all)")
     args = ap.parse_args(argv)
 
+    if args.tenants < 1:
+        raise SystemExit("--tenants must be >= 1")
     if args.reduced:
         dim = args.hd_dim or 512
         n_id = args.identities or 48
@@ -63,63 +86,102 @@ def main(argv=None):
     set_mesh(mesh)
     print(f"mesh: {dict(mesh.shape)}")
 
-    ms = SyntheticMSConfig(num_identities=n_id, spectra_per_identity=per_id,
-                           num_bins=num_bins, seed=args.seed)
-    ds = generate_dataset(ms)
     # SLC (1-bit) encoding keeps the HVs bipolar so the server can take the
     # bit-packed shard path whenever D % 32 == 0.
     cfg = SpecPCMConfig(hd_dim=dim, mlc_bits=1, num_levels=16, ideal=True,
                         seed=args.seed)
-    refs_hv = encode_and_pack(ds.spectra, cfg)
-    decoys_hv = encode_and_pack(make_decoys(ds.spectra), cfg)
     pack = False if args.no_pack else "auto"
-    db = shard_database(refs_hv, decoys=decoys_hv, mesh=mesh, pack=pack)
-    print(f"bank: {db.num_targets} targets + {db.num_decoys} decoys, D={dim}, "
-          f"{db.num_shards} shard(s) x {db.shard_rows} rows, "
-          f"packed={db.packed}")
+    registry = BankRegistry(mesh=mesh, pack=pack, max_banks=args.max_banks)
 
-    qs = generate_query_set(ds, ms, num_queries=n_q, seed=args.seed + 1)
-    q_hv = np.asarray(encode_and_pack(qs.spectra, cfg))
-    n_q = q_hv.shape[0]
+    datasets, query_pools = {}, {}
+    for t in range(args.tenants):
+        tenant = f"tenant{t}"
+        ms = SyntheticMSConfig(num_identities=n_id,
+                               spectra_per_identity=per_id,
+                               num_bins=num_bins, seed=args.seed + 31 * t)
+        ds = generate_dataset(ms)
+        refs_hv = encode_and_pack(ds.spectra, cfg)
+        decoys_hv = encode_and_pack(make_decoys(ds.spectra), cfg)
+        registry.register(tenant, refs_hv, decoys=decoys_hv, pin=t == 0)
+        qs = generate_query_set(ds, ms, num_queries=n_q,
+                                seed=args.seed + 31 * t + 1)
+        datasets[tenant] = (np.asarray(ds.identity), np.asarray(qs.identity))
+        query_pools[tenant] = np.asarray(encode_and_pack(qs.spectra, cfg))
+    print(f"{args.tenants} tenant bank(s) registered (lazy; built on first "
+          f"request), D={dim}, pack={pack}")
 
-    server = DBSearchServer(db, k=args.k, fdr=args.fdr,
-                            max_batch_size=max_batch,
-                            flush_timeout_s=args.flush_ms / 1e3)
-    # warm the jit cache (search + FDR routing) so latency numbers measure
-    # serving, not compile
-    search_with_fdr(db, jnp.zeros((max_batch, dim), jnp.int8), k=args.k,
+    server = DBSearchServer(
+        registry, k=args.k, fdr=args.fdr, max_batch_size=max_batch,
+        flush_timeout_s=args.flush_ms / 1e3,
+        cache_bytes=int(args.cache_mb * 2**20) or None,
+        buckets=args.buckets, fairness_cap=args.fairness_cap)
+
+    # warm the jit cache on the hot tenant (search + FDR routing) for the
+    # largest bucket so latency numbers measure serving, not compile; cold
+    # tenants pay their lazy shard+compile on first flush by design.
+    db0 = registry.get("tenant0")
+    search_with_fdr(db0, jnp.zeros((max_batch, dim), jnp.int8), k=args.k,
                     fdr=args.fdr)
 
+    # bursty, hot-tenant-skewed traffic; queries drawn WITH replacement so
+    # repeats exercise the content-hash cache.
     rng = np.random.default_rng(args.seed)
+    tenant_names = list(query_pools)
+    # tenant 0 gets ~half the traffic, the rest split the remainder
+    probs = np.asarray([2.0] + [1.0] * (args.tenants - 1)
+                       if args.tenants > 1 else [1.0])
+    probs = probs / probs.sum()
+    total = n_q * args.tenants
+    meta = {}  # rid -> (tenant, query row)
     done = []
-    i = 0
-    while i < n_q:
-        burst = int(rng.integers(1, max_batch + 1))  # bursty arrivals
-        for j in range(i, min(i + burst, n_q)):
-            server.submit(q_hv[j])
-        i += burst
+    sent = 0
+    while sent < total:
+        burst = int(rng.integers(1, max_batch + 1))
+        for _ in range(min(burst, total - sent)):
+            tenant = tenant_names[int(rng.choice(args.tenants, p=probs))]
+            qi = int(rng.integers(0, query_pools[tenant].shape[0]))
+            rid = server.submit(query_pools[tenant][qi], tenant=tenant)
+            meta[rid] = (tenant, qi)
+            sent += 1
         done.extend(server.step())
         if rng.random() < 0.3:  # idle gap: lets the flush timeout fire
             time.sleep(args.flush_ms / 1e3)
             done.extend(server.step())
     done.extend(server.run_until_drained())
-    assert len(done) == n_q, (len(done), n_q)
+    assert len(done) == total, (len(done), total)
 
-    ref_ident = np.asarray(ds.identity)
-    q_ident = np.asarray(qs.identity)
-    done.sort(key=lambda r: r.rid)
-    matched = np.asarray([r.result.match for r in done])
-    accepted = matched >= 0
-    correct = accepted & (ref_ident[np.where(accepted, matched, 0)]
-                          == q_ident[: n_q])
+    accepted = 0
+    correct = 0
+    for r in done:
+        tenant, qi = meta[r.rid]
+        if r.result.match >= 0:
+            accepted += 1
+            ref_ident, q_ident = datasets[tenant]
+            correct += int(ref_ident[r.result.match] == q_ident[qi])
+
     s = server.summary()
     print(f"served {s['count']} queries in {s['batches']} micro-batches "
-          f"(mean batch {s['mean_batch']:.1f})")
+          f"(mean batch {s['mean_batch']:.1f}; "
+          f"bucket usage {s['buckets']})")
     print(f"throughput: {s['qps']:.1f} queries/sec")
     print(f"latency: p50 {s['p50_ms']:.2f} ms, p95 {s['p95_ms']:.2f} ms, "
           f"mean {s['mean_ms']:.2f} ms")
-    print(f"identified at {args.fdr:.0%} FDR: {int(accepted.sum())}/{n_q} "
-          f"({int(correct.sum())} correct identity)")
+    qc = s["query_cache"]
+    if qc is not None:
+        print(f"query-HV cache: {qc['hits']} hits / {qc['misses']} misses "
+              f"(hit rate {qc['hit_rate']:.1%}), {qc['entries']} entries, "
+              f"{qc['bytes'] / 2**20:.2f}/{qc['capacity_bytes'] / 2**20:.0f} "
+              f"MiB, {qc['evictions']} evictions")
+    b = s["banks"]
+    print(f"banks: {b['built']}/{b['registered']} built ({b['builds']} "
+          f"builds, {b['evictions']} evictions, {b['pinned']} pinned)")
+    for tenant in sorted(s["tenants"]):
+        ts = s["tenants"][tenant]
+        print(f"  {tenant}: {ts['count']} reqs, p50 {ts['p50_ms']:.2f} ms, "
+              f"p95 {ts['p95_ms']:.2f} ms, "
+              f"cache hit rate {ts['cache_hit_rate']:.1%}")
+    print(f"identified at {args.fdr:.0%} FDR: {accepted}/{total} "
+          f"({correct} correct identity)")
     return s
 
 

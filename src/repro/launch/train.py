@@ -17,18 +17,20 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.data.tokens import TokenPipeline
 from repro.dist.checkpoint import CheckpointManager
-from repro.dist.sharding import set_mesh, tree_shardings, logical_to_sharding
-from repro.dist.straggler import StragglerMonitor, Action
+from repro.dist.sharding import logical_to_sharding, set_mesh
+from repro.dist.straggler import Action, StragglerMonitor
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models.model_zoo import build_model
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import (
-    TrainConfig, TrainState, init_train_state, make_train_step, state_axes,
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+    state_axes,
 )
 
 

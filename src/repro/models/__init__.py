@@ -1,3 +1,3 @@
-from repro.models.model_zoo import build_model, Model
+from repro.models.model_zoo import Model, build_model
 
 __all__ = ["build_model", "Model"]

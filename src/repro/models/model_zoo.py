@@ -15,14 +15,13 @@ Input conventions per family (DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.configs.shapes import ShapeSpec
-from repro.dist.sharding import constrain
 from repro.models import transformer as T
 
 Params = dict[str, Any]

@@ -10,7 +10,6 @@ unrolled; they are small.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any
 

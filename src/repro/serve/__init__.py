@@ -1,4 +1,4 @@
-"""Serving subsystem: sharded, micro-batched DB-search serving.
+"""Serving subsystem: sharded, micro-batched, multi-tenant DB-search serving.
 
 The paper's headline workload — spectral-library search expressed as
 integer matmuls — is served here at scale by combining the two mesh axes
@@ -8,20 +8,31 @@ of the production topology (see ``repro.launch.mesh``):
     (``db_search.shard_database``), each shard computes a local top-k and
     only ``Q x k`` candidates per shard cross the interconnect for the
     global merge — never the full ``Q x R`` score matrix;
-  * incoming queries are **batched over 'data'** behind a FIFO
-    micro-batching request queue (``queue.MicroBatchQueue``) that flushes
-    on a max batch size or a flush timeout, with per-request latency
-    accounting.
+  * incoming queries are **batched over 'data'** behind a tenant-aware
+    FIFO micro-batching request queue (``queue.MicroBatchQueue``) that
+    flushes on a max batch size or a flush timeout, with per-request
+    latency accounting and a per-flush fairness cap across tenants.
 
-``db_search.DBSearchServer`` glues both together and routes the merged
-results through target-decoy FDR filtering (``repro.spectra.fdr``).
+On top sits the serving cache layer (``cache``): ``QueryHVCache``
+memoizes encoded/packed query HVs under a content-hash LRU with a byte
+budget, and ``BankRegistry`` holds per-tenant ``ShardedDatabase`` handles
+with lazy shard-on-first-use, pinning, and LRU eviction of cold banks.
+
+``db_search.DBSearchServer`` glues all of it together — shape-bucketed
+batch dispatch, per-tenant latency/cache accounting — and routes the
+merged results through target-decoy FDR filtering (``repro.spectra.fdr``).
 ``repro.launch.serve_db`` is the runnable entry point.
 """
 
+from repro.serve.cache import BankRegistry, QueryHVCache
 from repro.serve.db_search import (
     DBSearchServer,
     ShardedDatabase,
+    bucket_for,
+    encode_queries,
+    make_buckets,
     search_database,
+    search_database_encoded,
     search_with_fdr,
     shard_database,
     sharded_topk_search,
@@ -29,13 +40,19 @@ from repro.serve.db_search import (
 from repro.serve.queue import LatencyStats, MicroBatchQueue, Request
 
 __all__ = [
+    "BankRegistry",
     "DBSearchServer",
+    "LatencyStats",
+    "MicroBatchQueue",
+    "QueryHVCache",
+    "Request",
     "ShardedDatabase",
+    "bucket_for",
+    "encode_queries",
+    "make_buckets",
     "search_database",
+    "search_database_encoded",
     "search_with_fdr",
     "shard_database",
     "sharded_topk_search",
-    "LatencyStats",
-    "MicroBatchQueue",
-    "Request",
 ]

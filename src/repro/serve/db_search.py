@@ -32,14 +32,23 @@ target/decoy score tie the decoy (lower row) wins the merged top-1 —
 exactly the conservative ``best_target > best_decoy`` competition of
 ``repro.core.pipeline.run_db_search`` — and the rank-0 candidate alone
 determines the competition outcome fed to ``repro.spectra.fdr``.
+
+**Serving layer.** :class:`DBSearchServer` runs the host-side loop:
+tenant-homogeneous micro-batches out of
+:class:`~repro.serve.queue.MicroBatchQueue`, per-tenant banks out of a
+:class:`~repro.serve.cache.BankRegistry` (lazy shard-on-first-use, LRU),
+query encodes memoized in a :class:`~repro.serve.cache.QueryHVCache`,
+and batch shapes padded to a bounded bucket ladder so tenant switches
+reuse the jit cache instead of recompiling.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +62,7 @@ from repro.core.hd.similarity import (
     hamming_similarity_packed,
     topk_search,
 )
+from repro.serve.cache import BankRegistry, QueryHVCache
 from repro.serve.queue import LatencyStats, MicroBatchQueue, Request
 from repro.spectra.fdr import fdr_filter
 
@@ -118,6 +128,7 @@ class ShardedDatabase:
     packed: bool
     mesh: Mesh | None
     axis: str
+    emulated_shards: int = 1
 
     @property
     def num_targets(self) -> int:
@@ -126,18 +137,23 @@ class ShardedDatabase:
     @property
     def num_shards(self) -> int:
         if self.mesh is None or self.axis not in self.mesh.shape:
-            return 1
+            return self.emulated_shards
         return self.mesh.shape[self.axis]
 
 
 def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
                    mesh: Mesh | None = None, axis: str = "model",
-                   pack: bool | str = "auto") -> ShardedDatabase:
+                   pack: bool | str = "auto",
+                   emulate_shards: int | None = None) -> ShardedDatabase:
     """Build a :class:`ShardedDatabase` from bipolar (R, D) reference HVs.
 
     decoys: optional (Rd, D) decoy HVs, stored *before* the targets (see
       module docstring for why the order matters).
     pack: True / False / "auto" (bit-pack whenever D % 32 == 0).
+    emulate_shards: with no mesh, pad/slice the bank as if it were split
+      into this many shards and run the identical local-top-k/merge
+      pipeline shard-by-shard on one device — the tier-1 stand-in for the
+      shard_map path (mutually exclusive with a >1 ``axis`` mesh).
     The padded bank is device_put row-sharded over ``axis`` when a mesh
     with that axis (size > 1) is supplied; otherwise it stays local.
     """
@@ -159,16 +175,21 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
             raise ValueError(f"pack=True requires D % 32 == 0, got D={dim}")
     store = bitpack_bipolar(bank) if packed else bank.astype(jnp.int8)
 
-    n = mesh.shape[axis] if (mesh is not None and axis in mesh.shape) else 1
+    mesh_n = mesh.shape[axis] if (mesh is not None and axis in mesh.shape) else 1
+    emu = int(emulate_shards or 1)
+    if emu > 1 and mesh_n > 1:
+        raise ValueError("emulate_shards requires no (or size-1) mesh axis")
+    n = mesh_n if mesh_n > 1 else emu
     shard_rows = -(-num_rows // n)  # ceil
     pad_rows = n * shard_rows - num_rows
     if pad_rows:
         store = jnp.pad(store, ((0, pad_rows), (0, 0)))
-    if n > 1:
+    if mesh_n > 1:
         store = jax.device_put(store, NamedSharding(mesh, P(axis, None)))
     return ShardedDatabase(data=store, num_rows=num_rows, num_decoys=num_decoys,
                            dim=dim, shard_rows=shard_rows, packed=packed,
-                           mesh=mesh if n > 1 else None, axis=axis)
+                           mesh=mesh if mesh_n > 1 else None, axis=axis,
+                           emulated_shards=emu if mesh_n == 1 else 1)
 
 
 @functools.lru_cache(maxsize=None)
@@ -192,6 +213,53 @@ def _sharded_search_fn(mesh: Mesh, axis: str, shard_rows: int, num_rows: int,
         out_specs=(q_spec, q_spec), check_rep=False))
 
 
+def encode_queries(db: ShardedDatabase, queries: jax.Array) -> jax.Array:
+    """Encode (Q, D) bipolar queries into the bank's storage form.
+
+    Deterministic (bit-pack to uint32 words when the bank is packed, else
+    an int8 cast) — which is what makes memoizing the result in
+    :class:`~repro.serve.cache.QueryHVCache` safe: cached and cold
+    encodes are bit-identical by construction.
+    """
+    return bitpack_bipolar(queries) if db.packed else queries.astype(jnp.int8)
+
+
+def search_database_encoded(db: ShardedDatabase, q_enc: jax.Array, k: int
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Top-k search over *already encoded* queries (see
+    :func:`encode_queries`) — the serving hot path, where encodes come
+    out of the query-HV cache."""
+    if k > db.num_rows:
+        raise ValueError(f"k={k} > bank rows {db.num_rows}")
+    if k > db.shard_rows:
+        raise ValueError(
+            f"k={k} exceeds shard_rows={db.shard_rows}; use fewer shards or "
+            f"a smaller k (local top-k needs k candidates per shard)")
+
+    if db.mesh is None:
+        if db.emulated_shards > 1:
+            vals_blocks, idx_blocks = [], []
+            for s in range(db.emulated_shards):
+                r_local = db.data[s * db.shard_rows:(s + 1) * db.shard_rows]
+                scores = _local_scores(q_enc, r_local, dim=db.dim,
+                                       packed=db.packed)
+                vals, gidx = _local_topk(scores, s * db.shard_rows, k,
+                                         db.num_rows)
+                vals_blocks.append(vals)
+                idx_blocks.append(gidx)
+            return _merge_topk(jnp.concatenate(vals_blocks, axis=1),
+                               jnp.concatenate(idx_blocks, axis=1), k)
+        scores = _local_scores(q_enc, db.data, dim=db.dim, packed=db.packed)
+        vals, gidx = _local_topk(scores, 0, k, db.num_rows)
+        return gidx, vals
+
+    data_n = db.mesh.shape.get("data", 1)
+    batch_sharded = data_n > 1 and q_enc.shape[0] % data_n == 0
+    fn = _sharded_search_fn(db.mesh, db.axis, db.shard_rows, db.num_rows,
+                            db.dim, db.packed, k, batch_sharded)
+    return fn(q_enc, db.data)
+
+
 def search_database(db: ShardedDatabase, queries: jax.Array, k: int
                     ) -> tuple[jax.Array, jax.Array]:
     """Top-k search of (Q, D) bipolar queries against a sharded bank.
@@ -199,24 +267,7 @@ def search_database(db: ShardedDatabase, queries: jax.Array, k: int
     Returns (indices (Q, k), scores (Q, k)) over global bank rows,
     bit-identical to ``topk_search(queries, bank)`` on one device.
     """
-    if k > db.num_rows:
-        raise ValueError(f"k={k} > bank rows {db.num_rows}")
-    if k > db.shard_rows:
-        raise ValueError(
-            f"k={k} exceeds shard_rows={db.shard_rows}; use fewer shards or "
-            f"a smaller k (local top-k needs k candidates per shard)")
-    q = bitpack_bipolar(queries) if db.packed else queries.astype(jnp.int8)
-
-    if db.mesh is None:
-        scores = _local_scores(q, db.data, dim=db.dim, packed=db.packed)
-        vals, gidx = _local_topk(scores, 0, k, db.num_rows)
-        return gidx, vals
-
-    data_n = db.mesh.shape.get("data", 1)
-    batch_sharded = data_n > 1 and queries.shape[0] % data_n == 0
-    fn = _sharded_search_fn(db.mesh, db.axis, db.shard_rows, db.num_rows,
-                            db.dim, db.packed, k, batch_sharded)
-    return fn(q, db.data)
+    return search_database_encoded(db, encode_queries(db, queries), k)
 
 
 def sharded_topk_search(queries: jax.Array, refs: jax.Array, k: int, *,
@@ -237,23 +288,8 @@ def sharded_topk_search(queries: jax.Array, refs: jax.Array, k: int, *,
         return search_database(db, queries, k)
     if num_shards is None or num_shards <= 1:
         return topk_search(queries, refs, k)
-
-    db = shard_database(refs, mesh=None, pack=pack)
-    q = bitpack_bipolar(queries) if db.packed else queries.astype(jnp.int8)
-    shard_rows = -(-db.num_rows // num_shards)
-    if k > shard_rows:
-        raise ValueError(f"k={k} > shard_rows={shard_rows}")
-    pad_rows = num_shards * shard_rows - db.num_rows
-    store = jnp.pad(db.data, ((0, pad_rows), (0, 0))) if pad_rows else db.data
-    vals_blocks, idx_blocks = [], []
-    for s in range(num_shards):
-        r_local = store[s * shard_rows:(s + 1) * shard_rows]
-        scores = _local_scores(q, r_local, dim=db.dim, packed=db.packed)
-        vals, gidx = _local_topk(scores, s * shard_rows, k, db.num_rows)
-        vals_blocks.append(vals)
-        idx_blocks.append(gidx)
-    return _merge_topk(jnp.concatenate(vals_blocks, axis=1),
-                       jnp.concatenate(idx_blocks, axis=1), k)
+    db = shard_database(refs, mesh=None, pack=pack, emulate_shards=num_shards)
+    return search_database(db, queries, k)
 
 
 # --------------------------------------------------------------------------
@@ -305,6 +341,37 @@ def search_with_fdr(db: ShardedDatabase, queries: jax.Array, k: int,
 
 
 # --------------------------------------------------------------------------
+# shape-bucketed dispatch
+# --------------------------------------------------------------------------
+
+def make_buckets(max_batch_size: int, num_buckets: int = 4) -> tuple[int, ...]:
+    """Geometric batch-size ladder ending at ``max_batch_size``.
+
+    E.g. ``make_buckets(32, 4) == (4, 8, 16, 32)``. Padding ragged
+    flushes up to the nearest bucket keeps the set of jit signatures
+    small (at most ``num_buckets`` batch shapes per bank geometry) while
+    wasting at most ~2x compute on the padded rows — instead of either
+    recompiling per ragged size or always padding to the maximum.
+    """
+    if max_batch_size < 1:
+        raise ValueError(f"max_batch_size must be >= 1, got {max_batch_size}")
+    if num_buckets < 1:
+        raise ValueError(f"num_buckets must be >= 1, got {num_buckets}")
+    bs = [int(max_batch_size)]
+    while len(bs) < num_buckets and bs[-1] > 1:
+        bs.append(bs[-1] // 2)
+    return tuple(sorted(set(bs)))
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """The smallest bucket >= n (buckets must be sorted ascending)."""
+    for b in buckets:
+        if b >= n:
+            return b
+    raise ValueError(f"batch of {n} exceeds largest bucket {buckets[-1]}")
+
+
+# --------------------------------------------------------------------------
 # serving loop
 # --------------------------------------------------------------------------
 
@@ -320,36 +387,106 @@ class QueryResult:
 
 
 class DBSearchServer:
-    """Micro-batched sharded DB-search server (host-side loop).
+    """Micro-batched, multi-tenant sharded DB-search server (host loop).
 
-    Requests carry already-encoded bipolar query HVs (D,). The server
-    flushes the queue per :class:`~repro.serve.queue.MicroBatchQueue`
-    policy, pads every flush to ``max_batch_size`` rows (one jit cache
-    entry regardless of ragged batch sizes; pad rows are sliced off
-    before FDR so they never pollute the estimate), runs the sharded
-    search, routes the merged results through FDR, and stamps
-    per-request latency into :class:`~repro.serve.queue.LatencyStats`.
+    Requests carry already-encoded bipolar query HVs (D,) plus a tenant
+    name; each tenant searches its own bank. The server accepts either a
+    single :class:`ShardedDatabase` (registered as the pinned ``default``
+    tenant) or a :class:`~repro.serve.cache.BankRegistry` of per-tenant
+    banks, which are sharded lazily on first use and LRU-evicted when
+    cold.
+
+    Per flush (tenant-homogeneous, per the
+    :class:`~repro.serve.queue.MicroBatchQueue` policy + fairness cap):
+    query rows are encoded through the content-hash
+    :class:`~repro.serve.cache.QueryHVCache` (misses batch-encoded once),
+    the batch is padded up to the nearest shape bucket (a bounded set of
+    jit signatures shared across tenants of equal bank geometry; pad rows
+    are sliced off before FDR so they never pollute the estimate), the
+    sharded search runs, merged results route through per-batch FDR, and
+    latency lands in both the aggregate and the per-tenant
+    :class:`~repro.serve.queue.LatencyStats`.
+
+    The cache is a pure memo of the deterministic encode, so cached and
+    cold paths return bit-identical results.
     """
 
-    def __init__(self, db: ShardedDatabase, *, k: int = 4, fdr: float = 0.01,
-                 max_batch_size: int = 32, flush_timeout_s: float = 0.01,
-                 clock: Callable[[], float] = time.monotonic):
-        self.db = db
+    def __init__(self, db: ShardedDatabase | BankRegistry, *, k: int = 4,
+                 fdr: float = 0.01, max_batch_size: int = 32,
+                 flush_timeout_s: float = 0.01,
+                 clock: Callable[[], float] = time.monotonic,
+                 cache_bytes: int | None = 64 << 20,
+                 buckets: int | Sequence[int] | None = None,
+                 fairness_cap: int | None = None):
+        if isinstance(db, BankRegistry):
+            self.db = None
+            self.banks = db
+        else:
+            self.db = db
+            self.banks = BankRegistry(mesh=db.mesh, axis=db.axis)
+            self.banks.adopt("default", db, pin=True)
         self.k = int(k)
         self.fdr = float(fdr)
         self.max_batch_size = int(max_batch_size)
+        if buckets is None:
+            self.buckets: tuple[int, ...] = (self.max_batch_size,)
+        elif isinstance(buckets, int):
+            self.buckets = make_buckets(self.max_batch_size, buckets)
+        else:
+            sizes = {int(b) for b in buckets if 1 <= int(b) <= max_batch_size}
+            self.buckets = tuple(sorted(sizes | {self.max_batch_size}))
         self.queue = MicroBatchQueue(max_batch_size=max_batch_size,
                                      flush_timeout_s=flush_timeout_s,
-                                     clock=clock)
+                                     clock=clock, fairness_cap=fairness_cap)
+        self.query_cache = (QueryHVCache(cache_bytes) if cache_bytes
+                            else None)
         self.stats = LatencyStats()
+        self.tenant_stats: dict[str, LatencyStats] = {}
+        self._tenant_cache: dict[str, list[int]] = {}  # tenant -> [hits, misses]
+        self._bucket_counts: collections.Counter[int] = collections.Counter()
         self._clock = clock
 
-    def submit(self, query_hv) -> int:
-        """Enqueue one encoded query HV (D,); returns the request id."""
+    def submit(self, query_hv, tenant: str = "default") -> int:
+        """Enqueue one encoded query HV (D,) for ``tenant`` (which must be
+        registered); returns the request id."""
         q = np.asarray(query_hv, dtype=np.int8)
-        if q.shape != (self.db.dim,):
-            raise ValueError(f"query shape {q.shape} != ({self.db.dim},)")
-        return self.queue.submit(q)
+        dim = self.banks.dim(tenant)  # KeyError for unknown tenants
+        if q.shape != (dim,):
+            raise ValueError(f"query shape {q.shape} != ({dim},)")
+        return self.queue.submit(q, tenant=tenant)
+
+    def _encode_batch(self, reqs: list[Request], db: ShardedDatabase,
+                      bucket: int, tenant: str) -> np.ndarray:
+        """Assemble the (bucket, width) encoded batch, through the cache."""
+        width = db.data.shape[-1]
+        out = np.zeros((bucket, width), dtype=np.dtype(db.data.dtype))
+        cache = self.query_cache
+        if cache is None:
+            qs = jnp.asarray(np.stack([r.query for r in reqs]))
+            out[: len(reqs)] = np.asarray(encode_queries(db, qs))
+            return out
+        variant = f"{'packed' if db.packed else 'int8'}:{db.dim}"
+        miss_pos, miss_keys = [], []
+        hits = 0
+        for i, r in enumerate(reqs):
+            key = cache.content_key(r.query, variant=variant)
+            row = cache.lookup(key)
+            if row is None:
+                miss_pos.append(i)
+                miss_keys.append(key)
+            else:
+                out[i] = row
+                hits += 1
+        if miss_pos:
+            qs = jnp.asarray(np.stack([reqs[i].query for i in miss_pos]))
+            enc = np.asarray(encode_queries(db, qs))
+            for j, i in enumerate(miss_pos):
+                out[i] = enc[j]
+                cache.insert(miss_keys[j], enc[j].copy())
+        tc = self._tenant_cache.setdefault(tenant, [0, 0])
+        tc[0] += hits
+        tc[1] += len(miss_pos)
+        return out
 
     def step(self, force: bool = False) -> list[Request]:
         """Run at most one micro-batch. Flushes when the queue policy says
@@ -359,11 +496,16 @@ class DBSearchServer:
         if not (self.queue.ready() or (force and len(self.queue))):
             return []
         reqs = self.queue.take_batch()
+        if not reqs:
+            return []
+        tenant = reqs[0].tenant
+        db = self.banks.get(tenant)  # lazy shard-on-first-use
         n = len(reqs)
-        batch = np.zeros((self.max_batch_size, self.db.dim), np.int8)
-        batch[:n] = np.stack([r.query for r in reqs])
-        idx, vals = search_database(self.db, jnp.asarray(batch), self.k)
-        routed = fdr_route(self.db, idx[:n], vals[:n], fdr=self.fdr)
+        bucket = bucket_for(n, self.buckets)
+        self._bucket_counts[bucket] += 1
+        batch = self._encode_batch(reqs, db, bucket, tenant)
+        idx, vals = search_database_encoded(db, jnp.asarray(batch), self.k)
+        routed = fdr_route(db, idx[:n], vals[:n], fdr=self.fdr)
         t_done = self._clock()
         for i, r in enumerate(reqs):
             r.result = QueryResult(
@@ -372,6 +514,7 @@ class DBSearchServer:
                 accept=bool(routed.accept[i]), match=int(routed.match[i]))
             r.t_done = t_done
         self.stats.record_batch(reqs)
+        self.tenant_stats.setdefault(tenant, LatencyStats()).record_batch(reqs)
         return reqs
 
     def run_until_drained(self) -> list[Request]:
@@ -382,4 +525,21 @@ class DBSearchServer:
         return done
 
     def summary(self) -> dict:
-        return self.stats.summary()
+        """Aggregate latency stats plus per-tenant accounting, query-cache
+        counters, bank-registry counters, and bucket usage."""
+        s = self.stats.summary()
+        tenants = {}
+        for t, st in self.tenant_stats.items():
+            d = st.summary()
+            h, m = self._tenant_cache.get(t, (0, 0))
+            d["cache_hits"] = h
+            d["cache_misses"] = m
+            d["cache_hit_rate"] = h / (h + m) if h + m else 0.0
+            tenants[t] = d
+        s["tenants"] = tenants
+        s["banks"] = self.banks.summary()
+        s["query_cache"] = (self.query_cache.summary()
+                            if self.query_cache else None)
+        s["buckets"] = {int(b): int(c)
+                        for b, c in sorted(self._bucket_counts.items())}
+        return s

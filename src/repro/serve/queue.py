@@ -1,12 +1,22 @@
-"""FIFO micro-batching request queue with per-request latency accounting.
+"""Tenant-aware FIFO micro-batching queue with per-request latency accounting.
 
 Serving throughput comes from batching queries over the 'data' mesh axis,
-but requests arrive one at a time. The queue accumulates them and flushes
-a batch when either
+but requests arrive one at a time — and, multi-tenant, against different
+reference banks, so a flush must be tenant-homogeneous. The queue keeps
+one FIFO lane per tenant and flushes a batch when either
 
-  * ``max_batch_size`` requests are pending (throughput bound), or
-  * the oldest pending request has waited ``flush_timeout_s`` (latency
-    bound — a lone request is never stranded).
+  * some tenant has ``max_batch_size`` requests pending (throughput
+    bound), or
+  * the oldest pending request (across all tenants) has waited
+    ``flush_timeout_s`` (latency bound — a lone request is never
+    stranded).
+
+``take_batch`` picks the tenant with a full lane first (oldest such
+lane), else the tenant owning the globally-oldest request. With a
+``fairness_cap``, a flush is additionally capped at that many requests
+while other tenants wait, and the tenant just served is skipped on the
+next pick — so one hot tenant can neither fill every flush nor take
+consecutive flushes while others are pending.
 
 The clock is injectable so flush-on-timeout is deterministic to test:
 
@@ -39,6 +49,7 @@ class Request:
     rid: int
     query: Any
     t_submit: float
+    tenant: str = "default"
     t_done: float | None = None
     result: Any = None
 
@@ -50,60 +61,107 @@ class Request:
 
 
 class MicroBatchQueue:
-    """FIFO queue that groups requests into micro-batches.
+    """Per-tenant FIFO queues that group requests into micro-batches.
 
     ``submit`` never blocks; the serving loop calls ``ready`` /
     ``take_batch`` (see :class:`repro.serve.db_search.DBSearchServer`).
+    Every batch returned by ``take_batch`` holds requests of a single
+    tenant, in FIFO order.
     """
 
     def __init__(self, max_batch_size: int = 32, flush_timeout_s: float = 0.01,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 fairness_cap: int | None = None):
         if max_batch_size < 1:
             raise ValueError(f"max_batch_size must be >= 1, got {max_batch_size}")
         if flush_timeout_s < 0:
             raise ValueError(f"flush_timeout_s must be >= 0, got {flush_timeout_s}")
+        if fairness_cap is not None and fairness_cap < 1:
+            raise ValueError(f"fairness_cap must be >= 1, got {fairness_cap}")
         self.max_batch_size = int(max_batch_size)
         self.flush_timeout_s = float(flush_timeout_s)
+        self.fairness_cap = fairness_cap
         self._clock = clock
-        self._pending: collections.deque[Request] = collections.deque()
+        self._pending: dict[str, collections.deque[Request]] = {}
         self._next_rid = 0
+        self._last_served: str | None = None
 
     def __len__(self) -> int:
-        return len(self._pending)
+        return sum(len(d) for d in self._pending.values())
 
-    def submit(self, query) -> int:
+    def pending_tenants(self) -> list[str]:
+        """Tenants with at least one pending request (insertion order)."""
+        return list(self._pending)
+
+    def submit(self, query, tenant: str = "default") -> int:
         """Enqueue one query; returns its request id (FIFO-ordered)."""
-        req = Request(rid=self._next_rid, query=query, t_submit=self._clock())
+        req = Request(rid=self._next_rid, query=query, tenant=tenant,
+                      t_submit=self._clock())
         self._next_rid += 1
-        self._pending.append(req)
+        self._pending.setdefault(tenant, collections.deque()).append(req)
         return req.rid
 
+    def _oldest(self) -> Request | None:
+        heads = [d[0] for d in self._pending.values() if d]
+        return min(heads, key=lambda r: r.rid) if heads else None
+
     def oldest_age_s(self) -> float | None:
-        if not self._pending:
+        oldest = self._oldest()
+        if oldest is None:
             return None
-        return self._clock() - self._pending[0].t_submit
+        return self._clock() - oldest.t_submit
 
     def ready(self) -> bool:
-        """True when a batch should flush: queue full, or oldest timed out."""
-        if len(self._pending) >= self.max_batch_size:
+        """True when a batch should flush: some tenant's lane is full, or
+        the globally-oldest request timed out."""
+        if any(len(d) >= self.max_batch_size for d in self._pending.values()):
             return True
         age = self.oldest_age_s()
         return age is not None and age >= self.flush_timeout_s
 
     def time_until_flush(self) -> float | None:
-        """Seconds until the timeout would flush; None when queue is empty,
-        0.0 when already flushable. Lets a serving loop sleep precisely."""
-        if not self._pending:
+        """Seconds until the timeout would flush; None when the queue is
+        empty, 0.0 when already flushable. Lets a serving loop sleep
+        precisely."""
+        if not len(self):
             return None
-        if len(self._pending) >= self.max_batch_size:
+        if any(len(d) >= self.max_batch_size for d in self._pending.values()):
             return 0.0
         return max(0.0, self.flush_timeout_s - self.oldest_age_s())
 
+    def next_tenant(self) -> str | None:
+        """The tenant the next ``take_batch`` would serve: the oldest full
+        lane, else the tenant of the globally-oldest request — except
+        that, under a ``fairness_cap``, the tenant served by the previous
+        flush is skipped while other tenants are waiting."""
+        lanes = self._pending
+        if (self.fairness_cap is not None and len(lanes) > 1
+                and self._last_served in lanes):
+            lanes = {t: d for t, d in lanes.items() if t != self._last_served}
+        full = [d[0] for d in lanes.values()
+                if len(d) >= self.max_batch_size]
+        if full:
+            return min(full, key=lambda r: r.rid).tenant
+        heads = [d[0] for d in lanes.values() if d]
+        return min(heads, key=lambda r: r.rid).tenant if heads else None
+
     def take_batch(self) -> list[Request]:
-        """Pop up to ``max_batch_size`` requests in FIFO order (may be
-        called unconditionally, e.g. to drain on shutdown)."""
-        n = min(len(self._pending), self.max_batch_size)
-        return [self._pending.popleft() for _ in range(n)]
+        """Pop up to ``max_batch_size`` requests of one tenant in FIFO
+        order (may be called unconditionally, e.g. to drain on shutdown).
+        With other tenants waiting, the flush is additionally capped at
+        ``fairness_cap`` requests."""
+        tenant = self.next_tenant()
+        if tenant is None:
+            return []
+        lane = self._pending[tenant]
+        n = min(len(lane), self.max_batch_size)
+        if self.fairness_cap is not None and len(self._pending) > 1:
+            n = min(n, self.fairness_cap)
+        batch = [lane.popleft() for _ in range(n)]
+        if not lane:
+            del self._pending[tenant]
+        self._last_served = tenant
+        return batch
 
 
 class LatencyStats:

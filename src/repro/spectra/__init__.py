@@ -1,6 +1,6 @@
-from repro.spectra.synthetic import SyntheticMSConfig, generate_dataset, MSDataset
+from repro.spectra.fdr import decoy_competition, fdr_filter
 from repro.spectra.preprocess import bin_spectra, bucket_by_precursor
-from repro.spectra.fdr import fdr_filter, decoy_competition
+from repro.spectra.synthetic import MSDataset, SyntheticMSConfig, generate_dataset
 
 __all__ = [
     "SyntheticMSConfig", "generate_dataset", "MSDataset",

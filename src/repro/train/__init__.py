@@ -1,6 +1,11 @@
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
-from repro.train.train_step import TrainConfig, TrainState, make_train_step, init_train_state
-from repro.train.serve_step import make_prefill, make_decode_step
+from repro.train.serve_step import make_decode_step, make_prefill
+from repro.train.train_step import (
+    TrainConfig,
+    TrainState,
+    init_train_state,
+    make_train_step,
+)
 
 __all__ = [
     "AdamWConfig", "adamw_init", "adamw_update",

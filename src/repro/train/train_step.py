@@ -12,7 +12,6 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.models.model_zoo import Model
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 

@@ -7,7 +7,9 @@ from scipy.cluster.hierarchy import fcluster, linkage
 from scipy.spatial.distance import squareform
 
 from repro.core.hd.clustering import (
-    clustered_spectra_ratio, complete_linkage, incorrect_clustering_ratio,
+    clustered_spectra_ratio,
+    complete_linkage,
+    incorrect_clustering_ratio,
     pairwise_distances,
 )
 

@@ -2,22 +2,14 @@
 elastic reshard + corruption tolerance), gradient compression, collective
 matmul, straggler monitor."""
 
-import dataclasses
-import json
-import shutil
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.dist.checkpoint import CheckpointManager
-from repro.dist.compression import (
-    compress_tree, init_error_state, topk_ef_compress,
-)
-from repro.dist.sharding import (
-    DEFAULT_RULES, ShardingRules, logical_to_spec, set_mesh,
-)
+from repro.dist.compression import compress_tree, init_error_state, topk_ef_compress
+from repro.dist.sharding import DEFAULT_RULES, logical_to_spec, set_mesh
 from repro.dist.straggler import Action, HeartbeatRegistry, StragglerMonitor
 
 

@@ -12,11 +12,18 @@ import pytest
 
 from repro.dist.checkpoint import CheckpointManager
 from repro.dist.compression import (
-    compress_tree, cross_pod_allreduce, init_error_state, topk_ef_compress,
+    compress_tree,
+    cross_pod_allreduce,
+    init_error_state,
+    topk_ef_compress,
 )
 from repro.dist.sharding import (
-    DEFAULT_RULES, RULE_PRESETS, ShardingRules, logical_to_spec,
-    set_mesh, tree_shardings,
+    DEFAULT_RULES,
+    RULE_PRESETS,
+    ShardingRules,
+    logical_to_spec,
+    set_mesh,
+    tree_shardings,
 )
 from repro.dist.straggler import Action, HeartbeatRegistry, StragglerMonitor
 

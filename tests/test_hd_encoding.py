@@ -1,19 +1,25 @@
 """Unit + property tests for HD encoding, packing, and similarity."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hd.encoding import (
-    HDEncoderConfig, encode_batch, encode_batch_reference, make_codebooks,
+    HDEncoderConfig,
+    encode_batch,
+    encode_batch_reference,
+    make_codebooks,
     quantize_levels,
 )
-from repro.core.hd.packing import pack_dimensions, unpack_dimensions, packed_levels
+from repro.core.hd.packing import pack_dimensions, packed_levels, unpack_dimensions
 from repro.core.hd.similarity import (
-    bitpack_bipolar, dot_similarity, hamming_similarity,
-    hamming_similarity_packed, top1_search, topk_search,
+    bitpack_bipolar,
+    dot_similarity,
+    hamming_similarity,
+    hamming_similarity_packed,
+    top1_search,
+    topk_search,
 )
 
 

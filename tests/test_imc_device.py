@@ -1,26 +1,42 @@
 """PCM device model, array model, ISA, and energy-model tests."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.imc.array import (
-    ArrayConfig, adc_quantize, dac_quantize, default_full_scale,
-    imc_mvm, imc_mvm_reference, program_hvs,
+    ArrayConfig,
+    adc_quantize,
+    dac_quantize,
+    default_full_scale,
+    imc_mvm,
+    imc_mvm_reference,
+    program_hvs,
 )
 from repro.core.imc.device import (
-    DeviceConfig, MATERIALS, SB2TE3_GST, TITE2_GST, apply_write_noise,
-    bit_error_rate, noise_sigma,
+    SB2TE3_GST,
+    TITE2_GST,
+    DeviceConfig,
+    apply_write_noise,
+    bit_error_rate,
+    noise_sigma,
 )
 from repro.core.imc.energy import (
-    DATASETS, DEFAULT_HW, PAPER_ENERGY, PAPER_TABLE2, PAPER_TABLE3,
-    clustering_cost, db_search_cost,
+    DATASETS,
+    DEFAULT_HW,
+    PAPER_ENERGY,
+    PAPER_TABLE2,
+    PAPER_TABLE3,
+    clustering_cost,
+    db_search_cost,
 )
 from repro.core.imc.isa import (
-    ISAExecutor, Instruction, Opcode, decode_instruction, encode_instruction,
+    Instruction,
+    ISAExecutor,
+    Opcode,
+    decode_instruction,
+    encode_instruction,
 )
 
 

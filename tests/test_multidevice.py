@@ -3,7 +3,6 @@ on a small mesh, sharded training equivalence, and compressed cross-pod
 all-reduce. Subprocesses are used because device count is fixed at jax init.
 """
 
-import json
 import os
 import subprocess
 import sys

@@ -8,7 +8,10 @@ from repro.core import SpecPCMConfig, run_clustering, run_db_search
 from repro.spectra import SyntheticMSConfig, generate_dataset
 from repro.spectra.fdr import fdr_filter, make_decoys
 from repro.spectra.preprocess import (
-    bin_spectra, bucket_by_precursor, candidate_window_mask, sqrt_normalize,
+    bin_spectra,
+    bucket_by_precursor,
+    candidate_window_mask,
+    sqrt_normalize,
 )
 from repro.spectra.synthetic import generate_query_set
 

@@ -1,10 +1,13 @@
 """Roofline parser unit tests (HLO collective-bytes extraction)."""
 
-import numpy as np
 import pytest
 
 from repro.launch.roofline import (
-    HBM_BW, ICI_BW, PEAK_FLOPS, RooflineReport, collective_bytes,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineReport,
+    collective_bytes,
 )
 
 HLO_FLAT = """

@@ -8,10 +8,9 @@ import sys
 import textwrap
 from pathlib import Path
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-
-import jax.numpy as jnp
 
 from repro.core.hd.similarity import bitpack_bipolar, topk_search, topk_search_packed
 from repro.serve import (
@@ -22,7 +21,6 @@ from repro.serve import (
     shard_database,
     sharded_topk_search,
 )
-from repro.serve.db_search import fdr_route
 from repro.serve.queue import LatencyStats, Request
 
 REPO = Path(__file__).resolve().parent.parent
