@@ -13,10 +13,12 @@ from repro.core.hd.similarity import (
     bitpack_bipolar,
     dot_similarity,
     hamming_similarity_packed,
+    topk_search_packed,
 )
 from repro.core.imc.array import ArrayConfig, default_full_scale
 from repro.core.imc.energy import DEFAULT_HW, stripes
 from repro.kernels.imc_mvm.ref import imc_mvm_ref
+from repro.kernels.topk_hamming import topk_hamming_pallas
 
 
 def run(quick: bool = False) -> None:
@@ -51,6 +53,36 @@ def run(quick: bool = False) -> None:
     us_pop = time_call(f_pop, ap, bp)
     emit("kernels/hamming_popcount_cpu", f"{us_pop:.1f}",
          f"Q={qn};R={rn};D={d32};speedup_vs_dense={us_dense / us_pop:.2f}x")
+
+    # top-k DB-search hot path, fused vs unfused: the unfused path
+    # materializes the (Q, R) int32 score matrix in HBM before lax.top_k;
+    # the fused kernel streams tiles through a VMEM running top-k and
+    # only ever writes (Q, k). On CPU the fused kernel runs in interpret
+    # mode (a correctness artifact, not perf), so the timed row is the
+    # unfused search it replaces and the derived column carries the
+    # analytic per-call HBM-traffic reduction.
+    kk = 8
+    f_topk = jax.jit(lambda x, y: topk_search_packed(x, y, d32, kk))
+    us_topk = time_call(f_topk, ap, bp)
+    score_bytes = qn * rn * 4
+    fused_bytes = qn * kk * 8  # (Q, k) values + (Q, k) indices
+    emit("kernels/topk_unfused_packed_cpu", f"{us_topk:.1f}",
+         f"Q={qn};R={rn};D={d32};k={kk};score_matrix_bytes={score_bytes}")
+    # agreement check on a slice spanning multiple Q and R blocks (forced
+    # small blocks), so the VMEM scratch reset and cross-tile merge both
+    # run; derived fields describe this checked shape, the traffic ratio
+    # is shape-independent (R*4 bytes/query vs k*8)
+    qf, rf = ap[:16], bp[:384]
+    ik, vk = topk_hamming_pallas(qf, rf, dim=d32, k=kk, block_q=8,
+                                 block_r=128)
+    io, vo = topk_search_packed(qf, rf, d32, kk)
+    mism = int((np.asarray(ik) != np.asarray(io)).sum()
+               + (np.asarray(vk) != np.asarray(vo)).sum())
+    emit("kernels/topk_fused_interpret_mismatches", f"{mism:d}",
+         f"Q={qf.shape[0]};R={rf.shape[0]};k={kk};"
+         f"bytes_per_query_unfused={rf.shape[0] * 4};"
+         f"bytes_per_query_fused={kk * 8};"
+         f"traffic_reduction={rf.shape[0] * 4 / (kk * 8):.0f}x")
 
     # Pallas kernels in interpret mode are correctness artifacts, not perf;
     # emit their numerical agreement instead of timing

@@ -1,19 +1,26 @@
 """Benchmark-regression gate for CI: machine-readable perf trajectory.
 
 Runs the benchmark orchestrator (``benchmarks/run.py``) under
-``REPRO_BENCH_QUICK=1``, parses its ``name,us_per_call,derived`` CSV rows,
-adds serving metrics (queries/sec, query-HV cache hit rate, p50/p95) from
-a reduced multi-tenant ``repro.launch.serve_db`` run, and writes the
-result as a repo-root ``BENCH_PR3.json`` — the artifact CI uploads so
-every PR leaves a perf data point behind.
+``REPRO_BENCH_QUICK=1``, parses its ``name,us_per_call,derived`` CSV rows
+(whole-suite timings plus the per-kernel ``kernels/`` rows, including the
+fused-vs-unfused top-k search pair), adds serving metrics (queries/sec,
+query-HV cache hit rate, p50/p95) from a reduced multi-tenant
+``repro.launch.serve_db`` run, and writes the result as a repo-root
+``BENCH_PR<N>.json`` (``--pr``, default: newest existing + 1) — the
+artifact CI uploads so every PR leaves a perf data point behind.
 
-If a prior ``BENCH_*.json`` exists at the repo root, timing rows are
-compared against the newest one: a suite that got more than ``--warn-pct``
+If a prior ``BENCH_*.json`` exists at the repo root, rows are compared
+against the newest one: a timing row that got more than ``--warn-pct``
 slower prints a warning, more than ``--fail-pct`` slower fails the job
-(new/removed suites are reported, never fatal).
+(new/removed suites are reported, never fatal). Serving metrics gate
+direction-aware at the same thresholds — queries/sec regresses downward,
+p50/p95 latency upward. Kernel correctness artifacts (``*_maxerr``,
+``*_mismatches``) are recorded but never timing-compared; a nonzero
+``*_mismatches`` row fails the job outright (kernel bit-identity broken).
 
 Usage:
   PYTHONPATH=src python scripts/bench_ci.py                # full gate
+  PYTHONPATH=src python scripts/bench_ci.py --pr 4         # pin the name
   PYTHONPATH=src python scripts/bench_ci.py --skip-serving # suites only
   PYTHONPATH=src python scripts/bench_ci.py --output /tmp/bench.json
 """
@@ -31,6 +38,14 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 
 _BENCH_NAME_RE = re.compile(r"BENCH_PR(\d+)\.json$")
+# rows captured into the JSON (and the regression gate): whole-suite
+# timings plus the per-kernel rows (the fused-vs-unfused search pair)
+_ROW_RE = re.compile(r"^(suite|kernels)/")
+# correctness artifacts, not timings: excluded from the slower-than
+# comparison. A *_mismatches row instead hard-fails whenever nonzero
+# (bit-identity broken), baseline or not; *_maxerr rows are float noise
+# and only recorded.
+_ARTIFACT_RE = re.compile(r"(_maxerr|_mismatches)$")
 
 
 def run_suites() -> list[dict]:
@@ -46,13 +61,18 @@ def run_suites() -> list[dict]:
                           capture_output=True, text=True, cwd=REPO, env=env)
     rows = []
     for line in proc.stdout.splitlines():
-        if not line.startswith("suite/"):
+        if not _ROW_RE.match(line):
             continue
         name, us, derived = line.split(",", 2)
-        rows.append({"name": name, "us_per_call": float(us),
-                     "derived": derived})
-    failed = [r["name"] for r in rows if r["derived"] == "FAILED"]
-    if proc.returncode != 0 or failed or not rows:
+        try:
+            us_f = float(us)
+        except ValueError:
+            continue  # non-numeric kernel artifacts stay out of the gate
+        rows.append({"name": name, "us_per_call": us_f, "derived": derived})
+    failed = [r["name"] for r in rows
+              if r["name"].startswith("suite/") and r["derived"] == "FAILED"]
+    if proc.returncode != 0 or failed or not any(
+            r["name"].startswith("suite/") for r in rows):
         sys.stderr.write(proc.stdout[-4000:] + proc.stderr[-4000:])
         raise SystemExit(
             f"benchmark suites failed (rc={proc.returncode}, "
@@ -102,6 +122,8 @@ def compare(baseline: dict, current: list[dict], *, warn_pct: float,
     old = {r["name"]: r["us_per_call"] for r in baseline.get("rows", [])}
     warnings, failures = [], []
     for row in current:
+        if _ARTIFACT_RE.search(row["name"]):
+            continue  # gated by artifact_failures(), baseline or not
         prev = old.get(row["name"])
         if prev is None:
             warnings.append(f"{row['name']}: new suite (no baseline)")
@@ -120,9 +142,63 @@ def compare(baseline: dict, current: list[dict], *, warn_pct: float,
     return warnings, failures
 
 
+# serving metrics are direction-aware: throughput regresses downward,
+# latency regresses upward; both gate at the same warn/fail thresholds
+_SERVING_DIRECTIONS = {
+    "queries_per_sec": "higher",
+    "p50_ms": "lower",
+    "p95_ms": "lower",
+}
+
+
+def compare_serving(baseline: dict, serving: dict | None, *, warn_pct: float,
+                    fail_pct: float) -> tuple[list[str], list[str]]:
+    """(warnings, failures) from serving-metric regressions vs baseline."""
+    old = baseline.get("serving") or {}
+    cur = serving or {}
+    warnings, failures = [], []
+    for name, direction in _SERVING_DIRECTIONS.items():
+        prev, now = old.get(name), cur.get(name)
+        if prev is None or now is None or prev <= 0:
+            continue
+        # positive delta == worse, whichever way the metric points
+        if direction == "higher":
+            delta = (prev - now) / prev
+        else:
+            delta = (now - prev) / prev
+        msg = (f"serving.{name}: {prev:.2f} -> {now:.2f} "
+               f"({delta:+.1%} worse, {direction} is better)")
+        if delta > fail_pct:
+            failures.append(msg)
+        elif delta > warn_pct:
+            warnings.append(msg)
+    return warnings, failures
+
+
+def artifact_failures(rows: list[dict]) -> list[str]:
+    """Hard failures from correctness-artifact rows — a nonzero
+    ``*_mismatches`` count means a kernel stopped matching its oracle.
+    Checked unconditionally, baseline or not."""
+    return [f"{r['name']}: {r['us_per_call']:.0f} mismatches "
+            f"(bit-identity broken)" for r in rows
+            if r["name"].endswith("_mismatches") and r["us_per_call"] > 0]
+
+
+def next_pr_number() -> int:
+    """One past the highest BENCH_PR<N>.json at the repo root (else 0)."""
+    nums = [int(m.group(1)) for p in REPO.glob("BENCH_*.json")
+            if (m := _BENCH_NAME_RE.search(p.name))]
+    return max(nums, default=-1) + 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--output", type=Path, default=REPO / "BENCH_PR3.json")
+    ap.add_argument("--output", type=Path, default=None,
+                    help="explicit output path (default: BENCH_PR<N>.json "
+                         "at the repo root, N from --pr)")
+    ap.add_argument("--pr", type=int, default=None,
+                    help="PR number for the default output name "
+                         "(default: newest existing BENCH_PR number + 1)")
     ap.add_argument("--baseline", type=Path, default=None,
                     help="explicit baseline JSON (default: newest prior "
                          "BENCH_*.json at the repo root)")
@@ -133,6 +209,9 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-serving", action="store_true",
                     help="skip the reduced serve_db run (suites only)")
     args = ap.parse_args(argv)
+    if args.output is None:
+        pr = args.pr if args.pr is not None else next_pr_number()
+        args.output = REPO / f"BENCH_PR{pr}.json"
 
     rows = run_suites()
     result = {
@@ -148,13 +227,22 @@ def main(argv=None) -> int:
          f", serving {result['serving']['queries_per_sec']:.1f} q/s, "
          f"cache hit rate {result['serving']['cache_hit_rate']:.1%}") + ")")
 
+    hard_failures = artifact_failures(rows)
+
     base_path = args.baseline or find_baseline(args.output)
     if base_path is None:
         print("no prior BENCH_*.json baseline found; comparison skipped")
-        return 0
+        for f in hard_failures:
+            print(f"  FAIL  {f}")
+        return 1 if hard_failures else 0
     baseline = json.loads(base_path.read_text())
     warnings, failures = compare(baseline, rows, warn_pct=args.warn_pct,
                                  fail_pct=args.fail_pct)
+    failures = hard_failures + failures
+    sw, sf = compare_serving(baseline, result["serving"],
+                             warn_pct=args.warn_pct, fail_pct=args.fail_pct)
+    warnings += sw
+    failures += sf
     print(f"compared against {base_path.name}: "
           f"{len(failures)} failure(s), {len(warnings)} warning(s)")
     for w in warnings:

@@ -31,20 +31,33 @@ class ClusteringResult:
 def pairwise_distances(hvs: jax.Array, dim: int | None = None) -> jax.Array:
     """Hamming distances between (packed or bipolar) HVs.
 
-    For bipolar HVs: hamming = (D - <a,b>) / 2. For packed HVs the packed dot
-    product estimates <a,b> so the same map applies with the *unpacked* D.
+    For bipolar HVs: hamming = (D - <a,b>) / 2. For MLC-packed HVs the packed
+    dot product estimates <a,b> so the same map applies with the *unpacked* D.
+
+    uint32 input takes the bit-packed fast path: for bipolar HVs packed with
+    :func:`repro.core.hd.similarity.bitpack_bipolar` the distance is exactly
+    ``popcount(a ^ b)``, computed by the ``hamming_pop`` Pallas kernel at
+    32 dims per lane — bit-identical to the einsum path on the unpacked
+    vectors. ``dim`` cancels out of the distance on this path (accepted
+    for API symmetry only).
 
     Args:
-      hvs: (N, D') integer HVs.
+      hvs: (N, D') integer HVs, or (N, D/32) uint32 bit-packed bipolar HVs.
       dim: original (unpacked) dimensionality D; defaults to D'.
     """
     n, dp = hvs.shape
     d = dim if dim is not None else dp
-    dots = jnp.einsum(
-        "id,jd->ij", hvs.astype(jnp.int32), hvs.astype(jnp.int32),
-        preferred_element_type=jnp.int32,
-    )
-    dist = (d - dots).astype(jnp.float32) * 0.5
+    if hvs.dtype == jnp.uint32:
+        from repro.kernels.hamming_pop import hamming_pop_pallas
+        # hamming_pop returns agreements (d - popcount); distance is the
+        # complement — exact for bipolar inputs, no /2 estimation step
+        dist = (d - hamming_pop_pallas(hvs, hvs, dim=d)).astype(jnp.float32)
+    else:
+        dots = jnp.einsum(
+            "id,jd->ij", hvs.astype(jnp.int32), hvs.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+        dist = (d - dots).astype(jnp.float32) * 0.5
     # zero the diagonal: self-distance is 0 even under packing estimation noise
     return dist * (1.0 - jnp.eye(n, dtype=jnp.float32))
 
@@ -69,13 +82,15 @@ def complete_linkage(dist: jax.Array, threshold: jax.Array | float) -> Clusterin
         m = active[:, None] & active[None, :] & ~eye
         return jnp.where(m, dm, big)
 
+    # the masked matrix rides in the carry so each merge iteration computes
+    # it exactly once (in body, for the next cond + argmin) instead of once
+    # in cond and again in body
     def cond(state):
-        dm, labels, active, merges = state
-        return jnp.min(masked(dm, active)) <= thr
+        dm, md, labels, active, merges = state
+        return jnp.min(md) <= thr
 
     def body(state):
-        dm, labels, active, merges = state
-        md = masked(dm, active)
+        dm, md, labels, active, merges = state
         flat = jnp.argmin(md)
         i, j = flat // n, flat % n
         lo, hi = jnp.minimum(i, j), jnp.maximum(i, j)
@@ -85,10 +100,10 @@ def complete_linkage(dist: jax.Array, threshold: jax.Array | float) -> Clusterin
         dm = dm.at[lo, lo].set(big)
         active = active.at[hi].set(False)
         labels = jnp.where(labels == hi, lo, labels)
-        return dm, labels, active, merges + 1
+        return dm, masked(dm, active), labels, active, merges + 1
 
-    state = (dmat, labels0, active0, jnp.int32(0))
-    dm, labels, active, merges = jax.lax.while_loop(cond, body, state)
+    state = (dmat, masked(dmat, active0), labels0, active0, jnp.int32(0))
+    dm, _, labels, active, merges = jax.lax.while_loop(cond, body, state)
     return ClusteringResult(
         labels=labels,
         num_merges=merges,

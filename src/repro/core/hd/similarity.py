@@ -70,7 +70,8 @@ def hamming_similarity_packed(q_packed: jax.Array, r_packed: jax.Array, dim: int
 
 
 def topk_search_packed(
-    q_packed: jax.Array, r_packed: jax.Array, dim: int, k: int
+    q_packed: jax.Array, r_packed: jax.Array, dim: int, k: int,
+    *, fused: bool = False
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k matches over bit-packed HVs — the packed twin of :func:`topk_search`.
 
@@ -80,6 +81,12 @@ def topk_search_packed(
     (``lax.top_k`` tie-breaking included). This is the fast host/TPU path
     the sharded DB-search server uses whenever ``dim % 32 == 0``.
 
+    With ``fused=True`` the search runs through the streaming Pallas
+    kernel (:func:`repro.kernels.topk_hamming.topk_hamming_pallas`),
+    which keeps the running top-k in VMEM and never writes the (Q, R)
+    score matrix to HBM — same results, O(Q·k) instead of O(Q·R) output
+    traffic.
+
     >>> import jax.numpy as jnp
     >>> refs = jnp.where(jnp.arange(4 * 64).reshape(4, 64) % 3 == 0, 1, -1)
     >>> idx, scores = topk_search_packed(
@@ -87,6 +94,11 @@ def topk_search_packed(
     >>> int(idx[0, 0]), int(scores[0, 0]), int(idx[0, 1])
     (1, 64, 2)
     """
+    if fused:
+        # deferred: keeps the core algorithm layer import-light — the
+        # kernel package is only pulled in when the fused path is taken
+        from repro.kernels.topk_hamming import topk_hamming_pallas
+        return topk_hamming_pallas(q_packed, r_packed, dim=dim, k=k)
     sims = hamming_similarity_packed(q_packed, r_packed, dim)
     scores = 2 * sims - dim  # back to the dot-product scale, exactly
     vals, idx = jax.lax.top_k(scores, k)

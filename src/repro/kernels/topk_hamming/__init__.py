@@ -1,0 +1,3 @@
+from repro.kernels.topk_hamming.ops import topk_hamming_pallas
+
+__all__ = ["topk_hamming_pallas"]

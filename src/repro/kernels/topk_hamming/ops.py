@@ -1,0 +1,81 @@
+"""Public jit'd wrapper for the fused streaming top-k Hamming kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_hamming.topk_hamming import topk_hamming_pallas_call
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@partial(jax.jit, static_argnames=("dim", "k", "block_q", "block_r",
+                                   "word_chunk", "interpret"))
+def topk_hamming_pallas(
+    q: jax.Array,
+    r: jax.Array,
+    *,
+    dim: int,
+    k: int,
+    num_valid: jax.Array | int | None = None,
+    block_q: int = 128,
+    block_r: int = 128,
+    word_chunk: int = 32,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused top-k search: (Q, W|D) x (R, W|D) -> (idx (Q, k), vals (Q, k)).
+
+    uint32 inputs are bit-packed HVs scored by XOR+popcount on the bipolar
+    dot-product scale (``dim - 2 * popcount``); int8 inputs score by a
+    plain integer dot (the ``D % 32 != 0`` fallback). Bit-identical to
+    ``lax.top_k`` over the full score matrix — tie order included — but
+    the (Q, R) matrix stays in VMEM tiles and only (Q, k) reaches HBM.
+
+    num_valid: reference rows at or past this count score as a sentinel
+      below any real score (the shard-padding mask of
+      ``repro.serve.db_search._local_topk``); may be a traced scalar.
+      Defaults to all R rows.
+
+    Zero row/word padding is harmless: padded reference rows fall outside
+    ``num_valid`` and padded words XOR to zero on both sides.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if q.ndim != 2 or r.ndim != 2 or q.shape[1] != r.shape[1]:
+        raise ValueError(f"bad operand shapes {q.shape} x {r.shape}")
+    if q.dtype != r.dtype:
+        raise ValueError(f"dtype mismatch {q.dtype} vs {r.dtype}")
+    packed = q.dtype == jnp.uint32
+    if not packed and q.dtype != jnp.int8:
+        raise ValueError(f"expected uint32 (packed) or int8, got {q.dtype}")
+    Q, W = q.shape
+    R = r.shape[0]
+    if not 1 <= k <= R:
+        raise ValueError(f"k={k} must be in [1, {R}]")
+
+    # shrink blocks to the (aligned) problem so tiny searches don't pay
+    # full 128x128 tiles in interpret mode
+    bq = min(block_q, _round_up(Q, 8))
+    br = min(block_r, _round_up(R, 128))
+    lane = word_chunk if packed else 128
+    pq, pr, pw = (-Q) % bq, (-R) % br, (-W) % lane
+    if pq or pw:
+        q = jnp.pad(q, ((0, pq), (0, pw)))
+    if pr or pw:
+        r = jnp.pad(r, ((0, pr), (0, pw)))
+
+    nv = R if num_valid is None else num_valid
+    nv = jnp.minimum(jnp.asarray(nv, jnp.int32).reshape(1), R)
+    vals, idx = topk_hamming_pallas_call(
+        q, r, nv, dim=dim, k=k, block_q=bq, block_r=br,
+        word_chunk=word_chunk, interpret=interpret)
+    return idx[:Q], vals[:Q]

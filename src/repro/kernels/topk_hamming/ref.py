@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused streaming top-k Hamming search.
+
+Materializes the full (Q, R) score matrix and runs ``lax.top_k`` over it —
+exactly what the fused kernel avoids, which is what makes it the
+bit-identity oracle (indices, scores, and tie order included).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_SENTINEL = jnp.iinfo(jnp.int32).min
+
+
+def topk_hamming_ref(q: jnp.ndarray, r: jnp.ndarray, dim: int, k: int,
+                     num_valid: int | jnp.ndarray | None = None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(Q, W|D) x (R, W|D) -> (idx (Q, k), vals (Q, k)) int32.
+
+    uint32 inputs score as ``dim - 2 * popcount(q ^ r)`` (the bipolar
+    dot-product scale); int8 inputs as a plain integer dot. Rows at or
+    past ``num_valid`` are masked below any real score before the top-k.
+    """
+    if q.dtype == jnp.uint32:
+        x = q[:, None, :] ^ r[None, :, :]
+        dist = jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+        scores = dim - 2 * dist
+    else:
+        scores = jnp.einsum("qd,rd->qr", q.astype(jnp.int32),
+                            r.astype(jnp.int32),
+                            preferred_element_type=jnp.int32)
+    if num_valid is not None:
+        col = jnp.arange(r.shape[0], dtype=jnp.int32)
+        scores = jnp.where(col[None, :] < num_valid, scores, _SENTINEL)
+    vals, idx = jax.lax.top_k(scores, k)
+    return idx.astype(jnp.int32), vals

@@ -50,6 +50,11 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-pack", action="store_true",
                     help="disable the bit-packed XOR+popcount shard path")
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="route per-shard search through the fused "
+                         "streaming top-k Pallas kernel (O(Q*k) candidate "
+                         "traffic; interpret-mode — slow — off TPU)")
     ap.add_argument("--tenants", type=int, default=1,
                     help="number of tenant banks (tenant 0 is pinned hot)")
     ap.add_argument("--cache-mb", type=float, default=64.0,
@@ -91,7 +96,8 @@ def main(argv=None):
     cfg = SpecPCMConfig(hd_dim=dim, mlc_bits=1, num_levels=16, ideal=True,
                         seed=args.seed)
     pack = False if args.no_pack else "auto"
-    registry = BankRegistry(mesh=mesh, pack=pack, max_banks=args.max_banks)
+    registry = BankRegistry(mesh=mesh, pack=pack, max_banks=args.max_banks,
+                            fused=args.fused)
 
     datasets, query_pools = {}, {}
     for t in range(args.tenants):
@@ -108,7 +114,7 @@ def main(argv=None):
         datasets[tenant] = (np.asarray(ds.identity), np.asarray(qs.identity))
         query_pools[tenant] = np.asarray(encode_and_pack(qs.spectra, cfg))
     print(f"{args.tenants} tenant bank(s) registered (lazy; built on first "
-          f"request), D={dim}, pack={pack}")
+          f"request), D={dim}, pack={pack}, fused={args.fused}")
 
     server = DBSearchServer(
         registry, k=args.k, fdr=args.fdr, max_batch_size=max_batch,

@@ -169,7 +169,7 @@ class BankRegistry:
 
     def __init__(self, *, mesh=None, axis: str = "model",
                  pack: bool | str = "auto", max_banks: int | None = None,
-                 emulate_shards: int | None = None):
+                 emulate_shards: int | None = None, fused: bool = False):
         if max_banks is not None and max_banks < 1:
             raise ValueError(f"max_banks must be >= 1, got {max_banks}")
         self.mesh = mesh
@@ -177,6 +177,7 @@ class BankRegistry:
         self.pack = pack
         self.max_banks = max_banks
         self.emulate_shards = emulate_shards
+        self.fused = fused
         self._specs: dict[str, _BankSpec] = {}
         self._built: collections.OrderedDict[str, Any] = collections.OrderedDict()
         self.builds = 0
@@ -234,7 +235,8 @@ class BankRegistry:
             from repro.serve.db_search import shard_database
             db = shard_database(spec.refs, decoys=spec.decoys, mesh=self.mesh,
                                 axis=self.axis, pack=self.pack,
-                                emulate_shards=self.emulate_shards)
+                                emulate_shards=self.emulate_shards,
+                                fused=self.fused)
             self.builds += 1
             self._built[tenant] = db
         else:

@@ -10,6 +10,15 @@ interconnect (``all_gather`` over ``model``), never the full ``Q x R``
 score matrix. A second ``lax.top_k`` over the ``Q x (n*k)`` gathered
 candidates produces the global result.
 
+**Fused per-shard search.** With ``shard_database(..., fused=True)`` the
+per-shard score-then-top-k pair is replaced by the streaming Pallas
+kernel (:mod:`repro.kernels.topk_hamming`): score tiles stay in VMEM and
+the running top-k is carried across reference tiles in scratch, so even
+*per shard* the ``Q x R/n`` score matrix never reaches HBM — candidate
+traffic is O(Q·k) end to end. The kernel reproduces ``lax.top_k``
+tie-breaking exactly, so every bit-identity invariant below holds
+unchanged on the fused path (the global k-merge is shared code).
+
 **Bit-identity with the unsharded oracle.** ``lax.top_k`` breaks ties
 toward the lower position. Each shard's local top-k orders tied scores by
 ascending local (hence global) index, and the gather concatenates shard
@@ -95,6 +104,29 @@ def _local_topk(scores, base, k: int, num_rows: int):
     return vals, local_idx.astype(jnp.int32) + base
 
 
+def _local_topk_fused(queries, refs_local, base, k: int, num_rows: int,
+                      dim: int):
+    """Fused twin of ``_local_scores`` + ``_local_topk``: the streaming
+    Pallas kernel computes tile scores and keeps the running top-k in
+    VMEM, so this shard's (Q, Rl) score matrix never reaches HBM.
+
+    base may be a python int (emulated shards) or a traced scalar (the
+    shard_map path); the kernel masks rows past ``num_rows - base`` to
+    the same sentinel ``_local_topk`` uses, and returns local indices
+    that translate to global rows by adding ``base`` — bit-identical to
+    the unfused pair, tie order included.
+    """
+    # deferred like similarity.topk_search_packed: the kernel package is
+    # only pulled in when a fused bank is actually searched
+    from repro.kernels.topk_hamming import topk_hamming_pallas
+    shard_rows = refs_local.shape[0]
+    num_valid = jnp.clip(jnp.asarray(num_rows - base, jnp.int32),
+                         0, shard_rows)
+    idx, vals = topk_hamming_pallas(queries, refs_local, dim=dim, k=k,
+                                    num_valid=num_valid)
+    return vals, idx + jnp.asarray(base, jnp.int32)
+
+
 def _merge_topk(cand_vals, cand_idx, k: int):
     """Global top-k over gathered per-shard candidates (Q, n*k).
 
@@ -129,6 +161,7 @@ class ShardedDatabase:
     mesh: Mesh | None
     axis: str
     emulated_shards: int = 1
+    fused: bool = False
 
     @property
     def num_targets(self) -> int:
@@ -144,7 +177,8 @@ class ShardedDatabase:
 def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
                    mesh: Mesh | None = None, axis: str = "model",
                    pack: bool | str = "auto",
-                   emulate_shards: int | None = None) -> ShardedDatabase:
+                   emulate_shards: int | None = None,
+                   fused: bool = False) -> ShardedDatabase:
     """Build a :class:`ShardedDatabase` from bipolar (R, D) reference HVs.
 
     decoys: optional (Rd, D) decoy HVs, stored *before* the targets (see
@@ -154,6 +188,11 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
       into this many shards and run the identical local-top-k/merge
       pipeline shard-by-shard on one device — the tier-1 stand-in for the
       shard_map path (mutually exclusive with a >1 ``axis`` mesh).
+    fused: route per-shard search through the streaming top-k Pallas
+      kernel (``repro.kernels.topk_hamming``) instead of materializing
+      each shard's (Q, R/n) score matrix — bit-identical results; packed
+      banks take the XOR+popcount tile path, unpacked banks the int8-dot
+      variant.
     The padded bank is device_put row-sharded over ``axis`` when a mesh
     with that axis (size > 1) is supplied; otherwise it stays local.
     """
@@ -189,19 +228,25 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
     return ShardedDatabase(data=store, num_rows=num_rows, num_decoys=num_decoys,
                            dim=dim, shard_rows=shard_rows, packed=packed,
                            mesh=mesh if mesh_n > 1 else None, axis=axis,
-                           emulated_shards=emu if mesh_n == 1 else 1)
+                           emulated_shards=emu if mesh_n == 1 else 1,
+                           fused=bool(fused))
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_search_fn(mesh: Mesh, axis: str, shard_rows: int, num_rows: int,
-                       dim: int, packed: bool, k: int, batch_sharded: bool):
+                       dim: int, packed: bool, k: int, batch_sharded: bool,
+                       fused: bool = False):
     """Compile the shard_map search for one (db geometry, k, batch) shape."""
     q_spec = P("data", None) if batch_sharded else P(None, None)
 
     def body(q, refs_local):
         base = jax.lax.axis_index(axis).astype(jnp.int32) * shard_rows
-        scores = _local_scores(q, refs_local, dim=dim, packed=packed)
-        vals, gidx = _local_topk(scores, base, k, num_rows)
+        if fused:
+            vals, gidx = _local_topk_fused(q, refs_local, base, k, num_rows,
+                                           dim)
+        else:
+            scores = _local_scores(q, refs_local, dim=dim, packed=packed)
+            vals, gidx = _local_topk(scores, base, k, num_rows)
         # Q x k per shard on the wire — all_gather concatenates the shard
         # blocks in ascending axis order (the tie-break invariant).
         vals_all = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
@@ -241,14 +286,23 @@ def search_database_encoded(db: ShardedDatabase, q_enc: jax.Array, k: int
             vals_blocks, idx_blocks = [], []
             for s in range(db.emulated_shards):
                 r_local = db.data[s * db.shard_rows:(s + 1) * db.shard_rows]
-                scores = _local_scores(q_enc, r_local, dim=db.dim,
-                                       packed=db.packed)
-                vals, gidx = _local_topk(scores, s * db.shard_rows, k,
-                                         db.num_rows)
+                if db.fused:
+                    vals, gidx = _local_topk_fused(
+                        q_enc, r_local, s * db.shard_rows, k, db.num_rows,
+                        db.dim)
+                else:
+                    scores = _local_scores(q_enc, r_local, dim=db.dim,
+                                           packed=db.packed)
+                    vals, gidx = _local_topk(scores, s * db.shard_rows, k,
+                                             db.num_rows)
                 vals_blocks.append(vals)
                 idx_blocks.append(gidx)
             return _merge_topk(jnp.concatenate(vals_blocks, axis=1),
                                jnp.concatenate(idx_blocks, axis=1), k)
+        if db.fused:
+            vals, gidx = _local_topk_fused(q_enc, db.data, 0, k, db.num_rows,
+                                           db.dim)
+            return gidx, vals
         scores = _local_scores(q_enc, db.data, dim=db.dim, packed=db.packed)
         vals, gidx = _local_topk(scores, 0, k, db.num_rows)
         return gidx, vals
@@ -256,7 +310,7 @@ def search_database_encoded(db: ShardedDatabase, q_enc: jax.Array, k: int
     data_n = db.mesh.shape.get("data", 1)
     batch_sharded = data_n > 1 and q_enc.shape[0] % data_n == 0
     fn = _sharded_search_fn(db.mesh, db.axis, db.shard_rows, db.num_rows,
-                            db.dim, db.packed, k, batch_sharded)
+                            db.dim, db.packed, k, batch_sharded, db.fused)
     return fn(q_enc, db.data)
 
 
@@ -273,7 +327,8 @@ def search_database(db: ShardedDatabase, queries: jax.Array, k: int
 def sharded_topk_search(queries: jax.Array, refs: jax.Array, k: int, *,
                         mesh: Mesh | None = None, axis: str = "model",
                         num_shards: int | None = None,
-                        pack: bool | str = "auto"
+                        pack: bool | str = "auto",
+                        fused: bool = False
                         ) -> tuple[jax.Array, jax.Array]:
     """One-shot sharded top-k (the oracle-comparable entry point).
 
@@ -281,14 +336,20 @@ def sharded_topk_search(queries: jax.Array, refs: jax.Array, k: int, *,
     With ``num_shards`` (and no mesh): run the identical local-topk/merge
     pipeline shard-by-shard on one device — used by tier-1 tests to prove
     shard-merge correctness without a multi-device runtime.
-    With neither: plain ``topk_search``.
+    With neither: plain ``topk_search`` (or the fused kernel over the
+    whole bank when ``fused``).
     """
     if mesh is not None:
-        db = shard_database(refs, mesh=mesh, axis=axis, pack=pack)
+        db = shard_database(refs, mesh=mesh, axis=axis, pack=pack,
+                            fused=fused)
         return search_database(db, queries, k)
     if num_shards is None or num_shards <= 1:
+        if fused:
+            db = shard_database(refs, mesh=None, pack=pack, fused=True)
+            return search_database(db, queries, k)
         return topk_search(queries, refs, k)
-    db = shard_database(refs, mesh=None, pack=pack, emulate_shards=num_shards)
+    db = shard_database(refs, mesh=None, pack=pack, emulate_shards=num_shards,
+                        fused=fused)
     return search_database(db, queries, k)
 
 

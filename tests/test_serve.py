@@ -300,10 +300,12 @@ def test_sharded_search_bit_identical_on_8_device_mesh():
                 q = jnp.asarray(rng.choice([-1, 1], (16, D)).astype(np.int8))
                 oi, ov = topk_search(q, refs, 4)
                 for pack in ([True, False] if D % 32 == 0 else [False]):
-                    db = shard_database(refs, mesh=mesh, pack=pack)
-                    si, sv = search_database(db, q, 4)
-                    assert (np.asarray(si) == np.asarray(oi)).all(), (model_n, R, D, pack)
-                    assert (np.asarray(sv) == np.asarray(ov)).all(), (model_n, R, D, pack)
+                    for fused in (False, True):
+                        db = shard_database(refs, mesh=mesh, pack=pack,
+                                            fused=fused)
+                        si, sv = search_database(db, q, 4)
+                        assert (np.asarray(si) == np.asarray(oi)).all(), (model_n, R, D, pack, fused)
+                        assert (np.asarray(sv) == np.asarray(ov)).all(), (model_n, R, D, pack, fused)
         print("SHARDED_TOPK_OK")
     """)
     assert "SHARDED_TOPK_OK" in r.stdout, r.stdout + r.stderr
