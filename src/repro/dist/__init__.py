@@ -26,7 +26,10 @@ and sharded in production. The remaining modules build on this substrate:
   * ``checkpoint`` — atomic step directories, keep-N GC, async save, and
     elastic reshard-on-load (restore into *different* shardings);
   * ``compression`` — stochastic-rounding int8 and error-feedback top-k
-    gradient compression plus a compressed cross-pod all-reduce;
+    gradient compression, compressed cross-pod all-reduces (single-array
+    ``cross_pod_allreduce`` and the train step's stacked-tree
+    ``dcn_allreduce_tree``), and the DCN wire-format accounting
+    (``tree_wire_bytes``) behind the ``dcn_bytes`` train metric;
   * ``collective_matmul`` — ring reduce / pipelined all-gather matmuls
     that overlap collective steps with compute;
   * ``straggler`` — EWMA step-time spike detection and host heartbeats.

@@ -8,6 +8,7 @@ through every function signature; with no mesh set the call is a no-op.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from typing import Union
@@ -26,6 +27,7 @@ class ShardingRules:
     idiom). Field names are the logical axes used by ``repro.models``."""
 
     batch: Rule = ("pod", "data")      # data-parallel batch dim
+    dcn_pod: Rule = "pod"              # stacked per-pod dim (grads/EF state)
     fsdp: Rule = "data"                # FSDP-sharded param dim
     heads: Rule = "model"              # attention query heads (TP)
     kv_heads: Rule = "model"           # attention kv heads (TP)
@@ -67,8 +69,42 @@ def get_mesh() -> Mesh | None:
     return _STATE["mesh"]
 
 
+def pod_axis_size(mesh: Mesh | None) -> int:
+    """Size of the 'pod' (DCN) axis of a mesh, 1 when absent / no mesh."""
+    if mesh is None:
+        return 1
+    return dict(mesh.shape).get("pod", 1)
+
+
 def get_rules() -> ShardingRules:
     return _STATE["rules"]
+
+
+def without_axis(rule: Rule, axis: str) -> Rule:
+    """Drop one mesh axis from a rule (None/str/tuple all handled)."""
+    if rule is None:
+        return None
+    if isinstance(rule, str):
+        return None if rule == axis else rule
+    kept = tuple(a for a in rule if a != axis)
+    return kept or None
+
+
+@contextlib.contextmanager
+def rules_override(**kw):
+    """Temporarily replace rule fields on the installed global rules.
+
+    Trace-time scoping tool: the hierarchical train step vmaps the model
+    over a stacked per-pod dim whose slices must resolve ``batch`` against
+    the ICI axes only (the ``pod`` axis is consumed by the stacking dim),
+    so it traces the per-pod body under ``rules_override(batch=...)``.
+    """
+    old = _STATE["rules"]
+    _STATE["rules"] = old.replace(**kw)
+    try:
+        yield _STATE["rules"]
+    finally:
+        _STATE["rules"] = old
 
 
 def baseline_mode() -> bool:
@@ -119,9 +155,14 @@ def logical_to_sharding(axes: tuple, shape: tuple, mesh: Mesh,
     return NamedSharding(mesh, logical_to_spec(axes, shape, mesh, rules))
 
 
-def _leaf_axes(x) -> bool:
+def is_axes_leaf(x) -> bool:
+    """True for a logical-axes tuple leaf like ('batch', None, 'heads') —
+    the ``is_leaf`` predicate for mapping over axes pytrees."""
     return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
                                         for e in x)
+
+
+_leaf_axes = is_axes_leaf  # internal alias, kept for existing callers
 
 
 def tree_shardings(axes_tree, shapes_tree, mesh: Mesh,

@@ -21,7 +21,7 @@ import jax
 from repro.configs import get_config
 from repro.data.tokens import TokenPipeline
 from repro.dist.checkpoint import CheckpointManager
-from repro.dist.sharding import logical_to_sharding, set_mesh
+from repro.dist.sharding import is_axes_leaf, logical_to_sharding, set_mesh
 from repro.dist.straggler import Action, StragglerMonitor
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models.model_zoo import build_model
@@ -44,7 +44,20 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="full")
-    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="legacy in-graph compression of the already-"
+                         "reduced grads (simulation only)")
+    ap.add_argument("--dcn-compression", default="none",
+                    choices=["none", "int8", "topk", "topk_ef"],
+                    help="wire compression on the cross-pod (DCN) hop of "
+                         "the hierarchical gradient reduction")
+    ap.add_argument("--dcn-pods", type=int, default=0,
+                    help="per-pod gradient slices; 0 = size of the mesh's "
+                         "'pod' axis (1 when absent)")
+    ap.add_argument("--dcn-topk-frac", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base of the per-step stochastic-rounding key")
     ap.add_argument("--imc-linear", action="store_true",
                     help="route FFN down-projections through the SpecPCM "
                          "IMC quantized-matmul model")
@@ -74,20 +87,26 @@ def main(argv=None):
         optimizer=AdamWConfig(lr=args.lr, total_steps=args.steps),
         remat=args.remat, microbatches=args.microbatches,
         grad_compression=args.grad_compression,
+        dcn_compression=args.dcn_compression, dcn_pods=args.dcn_pods,
+        dcn_topk_frac=args.dcn_topk_frac, seed=args.seed,
     )
 
     with mesh:
-        state, axes = init_train_state(model, jax.random.PRNGKey(0))
-        st_axes = state_axes(axes)
+        state, axes = init_train_state(model, jax.random.PRNGKey(0),
+                                       tcfg, mesh)
+        st_axes = state_axes(axes, tcfg)
         state_sh = jax.tree.map(
             lambda ax, x: logical_to_sharding(ax, tuple(x.shape), mesh),
-            st_axes, state,
-            is_leaf=lambda x: isinstance(x, tuple) and all(
-                isinstance(e, (str, type(None))) for e in x))
+            st_axes, state, is_leaf=is_axes_leaf)
         state = jax.tree.map(
             lambda x, s: jax.device_put(x, s) if s is not None else x,
             state, state_sh)
-        step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
+        raw_step = make_train_step(model, tcfg, mesh)
+        step_fn = jax.jit(raw_step, donate_argnums=(0,))
+        if raw_step.dcn_route != "global":
+            print(f"grad sync: {raw_step.dcn_route} hierarchy over "
+                  f"{raw_step.dcn_pods} pod(s), "
+                  f"dcn_compression={tcfg.dcn_compression}")
 
         pipe = TokenPipeline(batch=args.batch, seq=args.seq,
                              vocab=cfg.vocab_size)
@@ -118,9 +137,14 @@ def main(argv=None):
             if (step + 1) % args.log_every == 0 or step == start_step:
                 loss = float(metrics["loss"])
                 gn = float(metrics["grad_norm"])
+                dcn = ""
+                if float(metrics["dcn_bytes"]) > 0:
+                    dcn = (f" dcn={float(metrics['dcn_bytes']) / 2**20:.2f}"
+                           f"MiB/pod ({float(metrics['dcn_raw_bytes']) / max(float(metrics['dcn_bytes']), 1.0):.1f}x"
+                           " smaller)")
                 print(f"step {step + 1}: loss={loss:.4f} grad_norm={gn:.3f} "
-                      f"({(time.time() - t_start) / (step - start_step + 1):.2f}s/step)",
-                      flush=True)
+                      f"({(time.time() - t_start) / (step - start_step + 1):.2f}s/step)"
+                      + dcn, flush=True)
             if ckpt is not None and (step + 1) % args.ckpt_every == 0:
                 ckpt.save_async(step + 1, state)
         if ckpt is not None:

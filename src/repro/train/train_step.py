@@ -1,7 +1,44 @@
 """Train step factory: loss + grad + AdamW, with microbatch gradient
-accumulation, remat policy, optional gradient compression, and logical-axis
-output shardings — the single step function that both the real trainer and
-the multi-pod dry-run lower.
+accumulation, remat policy, hierarchical ICI/DCN gradient reduction with
+optional wire compression, and logical-axis output shardings — the single
+step function that both the real trainer and the multi-pod dry-run lower.
+
+Reduction contract
+------------------
+With ``dcn_compression='none'`` and no explicitly requested pod split
+(``dcn_pods`` 0 or 1 — the default, on any mesh) the step is the classic
+global path: one AD pass over the full batch, XLA inserts whatever
+all-reduces GSPMD needs. An uncompressed hierarchy would cost
+collective-buffer memory for zero wire savings, so it is never engaged
+implicitly.
+
+Otherwise the data-parallel reduction is split into a two-level
+hierarchy: the global batch is stacked into P per-pod slices, each pod
+computes its *own* gradients (grads arrive pre-psum per pod-slice — the
+in-pod reduction runs uncompressed over ICI), each pod's payload is
+compressed (``repro.dist.compression.dcn_send``), and only the
+compressed payload crosses the ``pod`` axis (DCN). Two routes share that
+math:
+
+* **emulated** (any device count, incl. the 1-CPU test tier): a
+  ``lax.scan`` over pod slices that accumulates compressed sends in pod
+  order — with ``dcn_compression='none'`` this is *bit-identical* to the
+  pre-existing microbatch-accumulation path with ``microbatches=P``
+  (same slicing, same left-fold adds, same 1/P scaling).
+* **shard_map** (mesh has a ``pod`` axis of size P): per-pod grads via
+  ``vmap`` over the stacked dim (so in-pod GSPMD sharding still applies
+  inside each slice), then ``repro.dist.compression.dcn_allreduce_tree``
+  performs the compressed psum over ``'pod'`` only.
+
+``topk_ef`` carries a per-pod error-feedback residual tree in
+``TrainState.ef`` (leaves ``(P, *param_shape)``, sharded over ``pod``,
+checkpointed with the rest of the state) so compression is unbiased
+across steps: sent + new_err == grads + old_err exactly, every step.
+Stochastic int8 rounding keys fold in both ``TrainState.step`` and the
+pod index, so noise decorrelates across steps *and* pods. Degradation:
+with a size-1 ``pod`` axis (or no mesh) the hierarchy collapses to the
+emulated route with P=1, whose fold is exact — compression still
+applies, the DCN hop is simply free.
 """
 
 from __future__ import annotations
@@ -12,6 +49,23 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.dist.compression import (
+    DCN_METHODS,
+    compress_tree,
+    dcn_allreduce_tree,
+    dcn_send,
+    per_step_key,
+    tree_wire_bytes,
+)
+from repro.dist.sharding import (
+    get_mesh,
+    get_rules,
+    is_axes_leaf,
+    logical_to_sharding,
+    pod_axis_size,
+    rules_override,
+    without_axis,
+)
 from repro.models.model_zoo import Model
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
@@ -22,11 +76,18 @@ Params = dict[str, Any]
 class TrainConfig:
     optimizer: AdamWConfig = AdamWConfig()
     remat: str = "full"              # full | dots | none
-    microbatches: int = 1            # gradient accumulation
-    grad_compression: str = "none"   # none | int8 | topk (dist/compression)
+    microbatches: int = 1            # gradient accumulation (within a pod)
+    grad_compression: str = "none"   # legacy in-graph simulation applied to
+    #                                  the *reduced* grads (none | int8 | topk)
     # cast fp32 master params to bf16 *before* the FSDP all-gather so the
     # gather moves half the bytes (mixed-precision training; §Perf lever).
     cast_params_bf16: bool = False
+    # hierarchical ICI/DCN reduction (the real cross-pod wire path):
+    dcn_compression: str = "none"    # none | int8 | topk | topk_ef
+    dcn_pods: int = 0                # per-pod slices; 0 = auto from the
+    #                                  mesh's 'pod' axis (1 when absent)
+    dcn_topk_frac: float = 0.01
+    seed: int = 0                    # base of the per-step rounding key
 
 
 @dataclasses.dataclass
@@ -34,37 +95,95 @@ class TrainState:
     params: Params
     opt: dict
     step: jax.Array
+    ef: Any = dataclasses.field(default_factory=dict)  # per-pod EF residuals
 
 jax.tree_util.register_dataclass(
-    TrainState, data_fields=["params", "opt", "step"], meta_fields=[])
+    TrainState, data_fields=["params", "opt", "step", "ef"], meta_fields=[])
 
 
-def init_train_state(model: Model, key: jax.Array) -> tuple[TrainState, Params]:
+def resolve_pods(tcfg: TrainConfig, mesh=None) -> int:
+    """Effective pod count: explicit ``dcn_pods``, or (when 0) the size of
+    the installed mesh's ``pod`` axis (1 with no mesh / no pod axis)."""
+    if tcfg.dcn_pods > 0:
+        return tcfg.dcn_pods
+    return pod_axis_size(mesh if mesh is not None else get_mesh())
+
+
+def _uses_hierarchy(tcfg: TrainConfig) -> bool:
+    """The hierarchy only engages when it buys something: compression on
+    the DCN hop, or an *explicitly requested* pod split. With the
+    defaults (``dcn_compression='none'``, ``dcn_pods=0``) a multi-pod
+    mesh keeps the pre-hierarchy global GSPMD reduction — an
+    uncompressed shard_map hop would cost collective-buffer memory for
+    zero wire savings."""
+    return tcfg.dcn_compression != "none" or tcfg.dcn_pods > 1
+
+
+def init_ef_state(params: Params, tcfg: TrainConfig | None,
+                  mesh=None) -> Any:
+    """Per-pod error-feedback residuals: ``(P, *shape)`` fp32 zeros when
+    ``dcn_compression`` carries state, else ``{}`` (an empty pytree)."""
+    if tcfg is None or tcfg.dcn_compression != "topk_ef":
+        return {}
+    pods = resolve_pods(tcfg, mesh)
+    return jax.tree.map(
+        lambda p: jnp.zeros((pods, *jnp.shape(p)), jnp.float32), params)
+
+
+def init_train_state(model: Model, key: jax.Array,
+                     tcfg: TrainConfig | None = None,
+                     mesh=None) -> tuple[TrainState, Params]:
     params, axes = model.init(key)
     return TrainState(params=params, opt=adamw_init(params),
-                      step=jnp.zeros((), jnp.int32)), axes
+                      step=jnp.zeros((), jnp.int32),
+                      ef=init_ef_state(params, tcfg, mesh)), axes
 
 
-def abstract_train_state(model: Model) -> tuple[TrainState, Any]:
+def abstract_train_state(model: Model, tcfg: TrainConfig | None = None,
+                         mesh=None) -> tuple[TrainState, Any]:
     """ShapeDtypeStruct TrainState + axes, no allocation (dry-run path)."""
     pshapes, axes = model.abstract_params()
     opt = jax.eval_shape(adamw_init, pshapes)
+    ef = jax.eval_shape(lambda p: init_ef_state(p, tcfg, mesh), pshapes)
     state = TrainState(params=pshapes, opt=opt,
-                       step=jax.ShapeDtypeStruct((), jnp.int32))
+                       step=jax.ShapeDtypeStruct((), jnp.int32), ef=ef)
     return state, axes
 
 
-def state_axes(axes: Params) -> TrainState:
-    """Logical axes pytree matching TrainState (mu/nu mirror params)."""
+def state_axes(axes: Params, tcfg: TrainConfig | None = None) -> TrainState:
+    """Logical axes pytree matching TrainState (mu/nu mirror params; EF
+    residuals mirror params behind a leading per-pod ``dcn_pod`` dim)."""
+    ef_axes: Any = {}
+    if tcfg is not None and tcfg.dcn_compression == "topk_ef":
+        ef_axes = jax.tree.map(lambda a: ("dcn_pod", *a), axes,
+                               is_leaf=is_axes_leaf)
     return TrainState(
         params=axes,
         opt={"mu": axes, "nu": axes, "step": ()},
         step=(),
+        ef=ef_axes,
     )
 
 
-def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
-    """Returns train_step(state, batch) -> (state, metrics)."""
+def make_train_step(model: Model, tcfg: TrainConfig,
+                    mesh=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    The returned function carries a ``dcn_route`` attribute naming the
+    reduction path it was built for: ``'global'`` (pre-hierarchy GSPMD
+    reduction), ``'emulated'`` (in-graph pod fold), or ``'shard_map'``
+    (real ``pod``-axis collective via ``dcn_allreduce_tree``)."""
+    if tcfg.dcn_compression not in DCN_METHODS:
+        raise ValueError(
+            f"unknown dcn_compression: {tcfg.dcn_compression}")
+    mesh = mesh if mesh is not None else get_mesh()
+    pods = resolve_pods(tcfg, mesh)
+    if _uses_hierarchy(tcfg):
+        route = ("shard_map" if pods > 1 and pod_axis_size(mesh) == pods
+                 else "emulated")
+    else:
+        route = "global"
+        pods = 1
 
     def loss_fn(params, batch):
         if tcfg.cast_params_bf16:
@@ -73,17 +192,19 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
                 if (p.dtype == jnp.float32 and p.ndim > 1) else p, params)
         return model.loss(params, batch, remat=tcfg.remat)
 
+    def _split(x, n):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
     def compute_grads(params, batch):
+        """Pod-local (or global-path) grads: one AD pass, or the
+        microbatch-accumulation scan when ``microbatches > 1``."""
         if tcfg.microbatches <= 1:
             return jax.value_and_grad(loss_fn)(params, batch)
         mb = tcfg.microbatches
 
-        def split(x):
-            b = x.shape[0]
-            assert b % mb == 0, (b, mb)
-            return x.reshape(mb, b // mb, *x.shape[1:])
-
-        batches = jax.tree.map(split, batch)
+        batches = jax.tree.map(lambda x: _split(x, mb), batch)
 
         def body(carry, mbatch):
             loss_acc, grad_acc = carry
@@ -95,14 +216,81 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
         inv = 1.0 / mb
         return loss * inv, jax.tree.map(lambda g: g * inv, grads)
 
+    def hier_grads_emulated(params, batch, ef, key):
+        """Per-pod grads + compressed reduce as one in-graph left-fold —
+        pod order matches the microbatch scan, so with
+        ``dcn_compression='none'`` this is bit-identical to the global
+        path with ``microbatches=pods``."""
+        batches = jax.tree.map(lambda x: _split(x, pods), batch)
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(pods))
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, xs):
+            loss_acc, grad_acc = carry
+            pod_batch, ef_p, key_p = xs
+            l, g = compute_grads(params, pod_batch)
+            sent, new_ef_p = dcn_send(g, ef_p, tcfg.dcn_compression,
+                                      tcfg.dcn_topk_frac, key_p)
+            return (loss_acc + l,
+                    jax.tree.map(jnp.add, grad_acc, sent)), new_ef_p
+
+        (loss, gsum), new_ef = jax.lax.scan(
+            body, (jnp.zeros(()), zero), (batches, ef, keys))
+        inv = 1.0 / pods
+        return loss * inv, jax.tree.map(lambda g: g * inv, gsum), new_ef
+
+    def hier_grads_shardmap(params, batch, ef, key):
+        """Per-pod grads via vmap over the stacked dim (in-pod GSPMD
+        sharding stays live inside each slice), compressed psum over the
+        ``pod`` axis only — the DCN hop carries compressed payloads."""
+        batches = jax.tree.map(lambda x: _split(x, pods), batch)
+        batches = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, logical_to_sharding(
+                    ("dcn_pod", "batch") + (None,) * (x.ndim - 2),
+                    tuple(x.shape), mesh)), batches)
+        # inside a pod slice, 'batch' must resolve to ICI axes only — the
+        # pod axis is already consumed by the stacking dim
+        with rules_override(batch=without_axis(get_rules().batch, "pod")):
+            losses, grads_p = jax.vmap(compute_grads, in_axes=(None, 0))(
+                params, batches)
+        red, new_ef = dcn_allreduce_tree(
+            grads_p, ef, mesh, axis="pod", method=tcfg.dcn_compression,
+            topk_frac=tcfg.dcn_topk_frac, key=key)
+        inv = 1.0 / pods
+        return (jnp.sum(losses) * inv,
+                jax.tree.map(lambda g: g * inv, red), new_ef)
+
+    hier_grads = (hier_grads_shardmap if route == "shard_map"
+                  else hier_grads_emulated)
+
     def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
-        loss, grads = compute_grads(state.params, batch)
+        if route == "global":
+            loss, grads = compute_grads(state.params, batch)
+            new_ef = state.ef
+            dcn_bytes = 0
+        else:
+            key = per_step_key(tcfg.seed, state.step)
+            loss, grads, new_ef = hier_grads(state.params, batch,
+                                             state.ef, key)
+            dcn_bytes = tree_wire_bytes(grads, tcfg.dcn_compression,
+                                        tcfg.dcn_topk_frac)
+        raw_bytes = tree_wire_bytes(grads, "none")
         if tcfg.grad_compression != "none":
-            from repro.dist.compression import compress_tree
-            grads = compress_tree(grads, method=tcfg.grad_compression)
+            # distinct stream from the DCN pod keys (pod indices < pods)
+            legacy_key = jax.random.fold_in(
+                per_step_key(tcfg.seed, state.step), 0x7e6)
+            grads = compress_tree(grads, method=tcfg.grad_compression,
+                                  key=legacy_key)
         params, opt, metrics = adamw_update(
             tcfg.optimizer, state.params, grads, state.opt)
-        metrics = dict(metrics, loss=loss)
-        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+        metrics = dict(metrics, loss=loss,
+                       dcn_bytes=jnp.float32(dcn_bytes),
+                       dcn_raw_bytes=jnp.float32(raw_bytes))
+        return TrainState(params=params, opt=opt, step=state.step + 1,
+                          ef=new_ef), metrics
 
+    train_step.dcn_route = route
+    train_step.dcn_pods = pods
     return train_step

@@ -37,6 +37,15 @@ def _install_hypothesis_shim():
                 return self.hi
             return rng.randint(self.lo, self.hi)
 
+    class _SampledFrom:
+        def __init__(self, options):
+            self.options = list(options)
+
+        def draw(self, rng, i):
+            if i < len(self.options):
+                return self.options[i]  # cover every option first
+            return rng.choice(self.options)
+
     def given(*strategies):
         def deco(fn):
             @functools.wraps(fn)
@@ -65,6 +74,7 @@ def _install_hypothesis_shim():
     mod.settings = settings
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = lambda lo, hi: _Integers(lo, hi)
+    st_mod.sampled_from = lambda options: _SampledFrom(options)
     mod.strategies = st_mod
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = st_mod

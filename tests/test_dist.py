@@ -50,6 +50,23 @@ class TestShardingRules:
         assert r.lookup("seq") == "model"
         assert r.lookup("vocab") == "model"
 
+    def test_without_axis(self):
+        from repro.dist.sharding import without_axis
+        assert without_axis(("pod", "data"), "pod") == ("data",)
+        assert without_axis(("pod",), "pod") is None
+        assert without_axis("pod", "pod") is None
+        assert without_axis("data", "pod") == "data"
+        assert without_axis(None, "pod") is None
+
+    def test_rules_override_scoped(self):
+        from repro.dist.sharding import get_rules, rules_override
+        base = get_rules()
+        with rules_override(batch=("data",)) as r:
+            assert r.lookup("batch") == ("data",)
+            assert get_rules().lookup("batch") == ("data",)
+            assert get_rules().lookup("fsdp") == base.lookup("fsdp")
+        assert get_rules() is base
+
 
 def _tree(seed=0):
     rng = np.random.default_rng(seed)

@@ -102,6 +102,79 @@ def test_sharded_training_matches_single_device():
 
 
 @pytest.mark.slow
+def test_hierarchical_train_step_on_pod_mesh():
+    """The real shard_map route of the hierarchical ICI/DCN train step on
+    a (2, 2, 2) ('pod', 'data', 'model') mesh: with dcn_compression='none'
+    it matches the single-device emulated fold (SPMD correctness), and
+    topk_ef trains with pod-sharded EF residuals."""
+    r = _run_py("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.data.tokens import TokenPipeline
+        from repro.dist.sharding import (set_mesh, is_axes_leaf,
+                                         logical_to_sharding)
+        from repro.train.train_step import (TrainConfig, init_train_state,
+                                            make_train_step, state_axes)
+
+        cfg = get_config("qwen2_7b").reduced()
+        model = build_model(cfg)
+        pipe = TokenPipeline(batch=8, seq=32, vocab=cfg.vocab_size)
+        from repro.train.optimizer import AdamWConfig
+        opt = AdamWConfig(lr=1e-3)
+
+        def run(tcfg, mesh):
+            set_mesh(mesh)
+            state, axes = init_train_state(model, jax.random.PRNGKey(0),
+                                           tcfg, mesh)
+            if mesh is not None:
+                sh = jax.tree.map(
+                    lambda ax, x: logical_to_sharding(ax, tuple(x.shape), mesh),
+                    state_axes(axes, tcfg), state, is_leaf=is_axes_leaf)
+                state = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s) if s is not None else x,
+                    state, sh)
+            raw = make_train_step(model, tcfg, mesh)
+            fn = jax.jit(raw)
+            ls = []
+            for s in range(3):
+                state, m = fn(state, pipe.get_for(cfg, s))
+                ls.append(float(m["loss"]))
+            set_mesh(None)
+            return raw, state, ls
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+        # defaults on a pod mesh keep the pre-hierarchy global reduction
+        # (an uncompressed shard_map hop would cost memory for nothing)
+        raw_g = make_train_step(model, TrainConfig(optimizer=opt), mesh)
+        assert raw_g.dcn_route == "global", raw_g.dcn_route
+
+        raw_e, _, l_emulated = run(TrainConfig(optimizer=opt, dcn_pods=2),
+                                   None)
+        assert raw_e.dcn_route == "emulated", raw_e.dcn_route
+        raw_s, _, l_shardmap = run(TrainConfig(optimizer=opt, dcn_pods=2),
+                                   mesh)
+        assert raw_s.dcn_route == "shard_map", raw_s.dcn_route
+        assert raw_s.dcn_pods == 2
+        np.testing.assert_allclose(l_emulated, l_shardmap, rtol=1e-4)
+
+        raw_c, st, l_ef = run(TrainConfig(optimizer=opt, dcn_pods=0,
+                                          dcn_compression="topk_ef"), mesh)
+        assert raw_c.dcn_route == "shard_map"
+        assert np.isfinite(l_ef).all()
+        np.testing.assert_allclose(l_ef, l_shardmap, atol=0.05)
+        leaves = jax.tree.leaves(st.ef)
+        assert leaves and all(l.shape[0] == 2 for l in leaves)
+        assert any("pod" in str(l.sharding.spec) for l in leaves)
+        assert sum(float(jnp.abs(l).sum()) for l in leaves) > 0
+        print("HIER_OK", l_shardmap)
+    """)
+    assert "HIER_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
 def test_compressed_cross_pod_allreduce():
     r = _run_py("""
         import jax, numpy as np

@@ -1,5 +1,7 @@
 """End-to-end trainer behaviour: loss goes down, checkpoint resume is exact,
-microbatching is consistent, IMC-linear trains."""
+microbatching is consistent, IMC-linear trains, and the hierarchical
+ICI/DCN gradient reduction is equivalent to the global path (bit-identical
+with ``dcn_compression='none'``, tolerance-tracking with int8/EF)."""
 
 import jax
 import jax.numpy as jnp
@@ -21,15 +23,26 @@ def setup():
     return cfg, model, pipe
 
 
-def _run(model, pipe, cfg, tcfg, steps, state=None, start=0):
+def _run(model, pipe, cfg, tcfg, steps, state=None, start=0,
+         collect_metrics=False):
     if state is None:
-        state, _ = init_train_state(model, jax.random.PRNGKey(0))
+        state, _ = init_train_state(model, jax.random.PRNGKey(0), tcfg)
     step_fn = jax.jit(make_train_step(model, tcfg))
-    losses = []
+    losses, metrics = [], []
     for s in range(start, steps):
         state, m = step_fn(state, pipe.get_for(cfg, s))
         losses.append(float(m["loss"]))
+        metrics.append({k: float(v) for k, v in m.items()})
+    if collect_metrics:
+        return state, losses, metrics
     return state, losses
+
+
+def _assert_states_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for la, lb in zip(jax.tree.leaves(a.opt), jax.tree.leaves(b.opt)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
 def test_loss_decreases(setup):
@@ -103,6 +116,182 @@ def test_grad_compression_trains(setup):
     _, losses = _run(model, pipe, cfg, tcfg, 15)
     assert np.isfinite(losses).all()
     assert losses[-1] < losses[0] - 0.1
+
+
+class TestHierarchicalDCN:
+    """The hierarchical ICI/DCN reduction on emulated pod shards (tier-1,
+    single device — the shard_map route runs in tests/test_multidevice.py).
+    The reduction contract: grads arrive pre-psum per pod-slice, each
+    pod's payload is compressed, the fold crosses pods in ascending pod
+    order — with ``dcn_compression='none'`` that is the accumulate-then-
+    psum global path, and must match it bit-for-bit."""
+
+    @pytest.mark.parametrize("pods", [2, 4, 8])
+    def test_none_bit_identical_to_global_psum(self, setup, pods):
+        """On `pods` emulated shards, the hierarchical path with
+        method='none' reproduces the global-psum step bit-for-bit
+        (params, optimizer state, loss, grad_norm) over several steps."""
+        cfg, model, pipe = setup
+        opt = AdamWConfig(lr=1e-3)
+        s_global, _, m_global = _run(
+            model, pipe, cfg,
+            TrainConfig(optimizer=opt, microbatches=pods), 3,
+            collect_metrics=True)
+        s_hier, _, m_hier = _run(
+            model, pipe, cfg,
+            TrainConfig(optimizer=opt, dcn_pods=pods), 3,
+            collect_metrics=True)
+        _assert_states_equal(s_global, s_hier)
+        for mg, mh in zip(m_global, m_hier):
+            assert mg["loss"] == mh["loss"]
+            assert mg["grad_norm"] == mh["grad_norm"]
+
+    def test_pods1_none_bit_identical_to_pre_hierarchy_step(self, setup):
+        """Degradation: a size-1 pod axis collapses to the pre-hierarchy
+        global step exactly (same single AD pass, no fold, no scaling)."""
+        cfg, model, pipe = setup
+        opt = AdamWConfig(lr=1e-3)
+        s_old, _ = _run(model, pipe, cfg, TrainConfig(optimizer=opt), 3)
+        s_new, _ = _run(model, pipe, cfg,
+                        TrainConfig(optimizer=opt, dcn_pods=1,
+                                    dcn_compression="none"), 3)
+        _assert_states_equal(s_old, s_new)
+
+    def test_hierarchy_composes_with_microbatches(self, setup):
+        """pods=2 x microbatches=2 sees the same slices in the same order
+        as the flat 4-way accumulation; only the 1/P scaling point
+        differs, so states match to float tolerance."""
+        cfg, model, pipe = setup
+        opt = AdamWConfig(lr=1e-3)
+        s_flat, _ = _run(model, pipe, cfg,
+                         TrainConfig(optimizer=opt, microbatches=4), 2)
+        s_hier, _ = _run(model, pipe, cfg,
+                         TrainConfig(optimizer=opt, dcn_pods=2,
+                                     microbatches=2), 2)
+        for a, b in zip(jax.tree.leaves(s_flat.params),
+                        jax.tree.leaves(s_hier.params)):
+            np.testing.assert_allclose(np.asarray(a, dtype=np.float32),
+                                       np.asarray(b, dtype=np.float32),
+                                       rtol=2e-3, atol=2e-5)
+
+    @pytest.mark.parametrize("method", ["int8", "topk_ef"])
+    def test_compressed_tracks_uncompressed(self, setup, method):
+        """int8/EF-top-k on 8 emulated pods track the uncompressed loss
+        trajectory within tolerance over 20+ steps (EF keeps top-k
+        unbiased across steps; int8 rounding is zero-mean)."""
+        cfg, model, pipe = setup
+        opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=25)
+        frac = 0.25  # aggressive enough to hurt if EF were broken
+        _, l_ref = _run(model, pipe, cfg,
+                        TrainConfig(optimizer=opt, dcn_pods=8), 22)
+        _, l_c = _run(model, pipe, cfg,
+                      TrainConfig(optimizer=opt, dcn_pods=8,
+                                  dcn_compression=method,
+                                  dcn_topk_frac=frac), 22)
+        assert np.isfinite(l_c).all()
+        # same warm-start point, loss still goes down...
+        assert l_c[-1] < l_c[0] - 0.3, (l_c[0], l_c[-1])
+        # ...and the trajectory stays close to the uncompressed one
+        dev = np.abs(np.asarray(l_c) - np.asarray(l_ref)).max()
+        assert dev < 0.25, (dev, method)
+
+    def test_ef_state_carried_and_conserved(self, setup):
+        """TrainState.ef is per-pod, nonzero after a step, and one more
+        step keeps the EF invariant: what was not sent is exactly what
+        the residual holds (checked through the jitted step)."""
+        cfg, model, pipe = setup
+        tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3), dcn_pods=2,
+                           dcn_compression="topk_ef", dcn_topk_frac=0.1)
+        state, _ = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+        assert all(l.shape[0] == 2 for l in jax.tree.leaves(state.ef))
+        assert all(float(jnp.abs(l).max()) == 0.0
+                   for l in jax.tree.leaves(state.ef))
+        step_fn = jax.jit(make_train_step(model, tcfg))
+        state, _ = step_fn(state, pipe.get_for(cfg, 0))
+        assert sum(float(jnp.abs(l).sum())
+                   for l in jax.tree.leaves(state.ef)) > 0.0
+
+    def test_dcn_bytes_metric(self, setup):
+        """The step reports its wire footprint: none == raw fp32 bytes,
+        int8 ~4x smaller, EF-top-k >=4x smaller (the acceptance bar)."""
+        cfg, model, pipe = setup
+        opt = AdamWConfig(lr=1e-3)
+        byt = {}
+        for method in ("none", "int8", "topk_ef"):
+            _, _, ms = _run(model, pipe, cfg,
+                            TrainConfig(optimizer=opt, dcn_pods=2,
+                                        dcn_compression=method), 1,
+                            collect_metrics=True)
+            byt[method] = ms[0]["dcn_bytes"]
+            assert ms[0]["dcn_raw_bytes"] == byt["none"] or method == "none"
+        assert byt["none"] > 0
+        assert byt["none"] / byt["int8"] > 3.9
+        assert byt["none"] / byt["topk_ef"] >= 4.0
+
+    def test_checkpoint_roundtrip_with_ef(self, tmp_path, setup):
+        """EF residuals are part of TrainState: save/restore mid-run and
+        the continued trajectory is identical to an uninterrupted one."""
+        from repro.dist.checkpoint import CheckpointManager
+        cfg, model, pipe = setup
+        tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3), dcn_pods=2,
+                           dcn_compression="topk_ef")
+        s_a, _ = _run(model, pipe, cfg, tcfg, 4)
+        s_b, _ = _run(model, pipe, cfg, tcfg, 2)
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(2, s_b)
+        _, s_c = mgr.restore_latest(s_b)
+        s_c, _ = _run(model, pipe, cfg, tcfg, 4, state=s_c, start=2)
+        _assert_states_equal(s_a, s_c)
+        for la, lb in zip(jax.tree.leaves(s_a.ef), jax.tree.leaves(s_c.ef)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+class TestSeedDeterminism:
+    """Same seed => bit-identical metrics across two runs (regression
+    gate for the per-step rounding-key threading)."""
+
+    @pytest.mark.parametrize("kw", [
+        dict(),
+        dict(microbatches=4, remat="none"),
+        dict(dcn_pods=4, dcn_compression="int8"),
+        dict(dcn_pods=2, dcn_compression="topk_ef", microbatches=2,
+             remat="dots"),
+    ], ids=["plain", "microbatch-noremat", "hier-int8", "hier-ef-mb-dots"])
+    def test_same_seed_same_metrics(self, setup, kw):
+        cfg, model, pipe = setup
+        tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3), **kw)
+        _, _, m1 = _run(model, pipe, cfg, tcfg, 3, collect_metrics=True)
+        _, _, m2 = _run(model, pipe, cfg, tcfg, 3, collect_metrics=True)
+        assert m1 == m2
+
+    def test_different_seed_different_rounding(self, setup):
+        cfg, model, pipe = setup
+        base = dict(optimizer=AdamWConfig(lr=1e-3), dcn_pods=2,
+                    dcn_compression="int8")
+        _, l0 = _run(model, pipe, cfg, TrainConfig(**base, seed=0), 2)
+        _, l1 = _run(model, pipe, cfg, TrainConfig(**base, seed=1), 2)
+        assert l0[1] != l1[1]  # step-1 loss sees step-0's rounding noise
+
+
+def test_serve_step_factories_match_model(setup):
+    """The serving-step factories are thin shims over the model API:
+    prefill returns only the last position, decode matches the model."""
+    from repro.train.serve_step import make_decode_step, make_prefill
+    cfg, model, _ = setup
+    state, _ = init_train_state(model, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(batch=2, seq=16, vocab=cfg.vocab_size)
+    batch = pipe.get_for(cfg, 0)
+    cache = model.init_cache(2, 16)
+    logits, cache = make_prefill(model)(state.params, batch, cache)
+    assert logits.shape == (2, 1, cfg.padded_vocab)
+    ref, _ = model.prefill(state.params, batch, model.init_cache(2, 16))
+    np.testing.assert_array_equal(np.asarray(logits),
+                                  np.asarray(ref[:, -1:]))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, _ = make_decode_step(model)(
+        state.params, tok, cache, jnp.asarray(15, jnp.int32))
+    assert logits2.shape == (2, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits2)).all()
 
 
 class TestOptimizer:
