@@ -84,6 +84,32 @@ def run(quick: bool = False) -> None:
          f"bytes_per_query_fused={kk * 8};"
          f"traffic_reduction={rf.shape[0] * 4 / (kk * 8):.0f}x")
 
+    # banded (OMS) variant: per-query windows over a 5-tile bank, checked
+    # against sentinel-masking the full score matrix (the serving OMS
+    # oracle); the derived column carries the scan reduction the per-block
+    # tile budget buys over a full-bank pass. Bands mimic the server's
+    # precursor-sorted batches: two 8-query blocks, each clustered in its
+    # own mass region, with window ends crossing a 128-row tile boundary.
+    from repro.kernels.topk_hamming import topk_hamming_banded_pallas
+    from repro.kernels.topk_hamming.ref import topk_hamming_banded_ref
+    rb = bp[:640]
+    b_starts = (np.repeat([0, 384], 8)
+                + np.arange(16) % 8 * 16).astype(np.int32)
+    b_lens = rng.integers(32, 129, 16).astype(np.int32)
+    b_tiles = max(
+        -(-int((b_starts + b_lens)[i:i + 8].max()) // 128)
+        - int(b_starts[i:i + 8].min()) // 128
+        for i in range(0, 16, 8))
+    ib, vb = topk_hamming_banded_pallas(qf, rb, jnp.asarray(b_starts),
+                                        jnp.asarray(b_lens), dim=d32,
+                                        k=kk, num_tiles=b_tiles, block_q=8)
+    ibo, vbo = topk_hamming_banded_ref(qf, rb, b_starts, b_lens, d32, kk)
+    mismb = int((np.asarray(ib) != np.asarray(ibo)).sum()
+                + (np.asarray(vb) != np.asarray(vbo)).sum())
+    emit("kernels/topk_banded_interpret_mismatches", f"{mismb:d}",
+         f"Q={qf.shape[0]};R={rb.shape[0]};k={kk};num_tiles={b_tiles};"
+         f"scan_reduction={rb.shape[0] / 128 / b_tiles:.1f}x")
+
     # Pallas kernels in interpret mode are correctness artifacts, not perf;
     # emit their numerical agreement instead of timing
     from repro.kernels.imc_mvm.ops import imc_mvm_pallas

@@ -5,23 +5,32 @@ Runs the benchmark orchestrator (``benchmarks/run.py``) under
 (whole-suite timings plus the per-kernel ``kernels/`` rows, including the
 fused-vs-unfused top-k search pair), adds serving metrics (queries/sec,
 query-HV cache hit rate, p50/p95) from a reduced multi-tenant
-``repro.launch.serve_db`` run plus training metrics (per-step time and
-DCN bytes for the hierarchical compressed gradient sync, as ``train/``
-rows), and writes the result as a repo-root ``BENCH_PR<N>.json``
+``repro.launch.serve_db`` run, open-modification serving metrics
+(``oms_*``: qps/p50/p95 plus the candidate and scanned fractions of the
+banded precursor-window scan) from a second ``serve_db --oms --fused``
+run, plus training metrics (per-step time and DCN bytes for the
+hierarchical compressed gradient sync, as ``train/`` rows), and writes
+the result as a repo-root ``BENCH_PR<N>.json``
 (``--pr``, default: newest existing + 1) — the artifact CI uploads so
 every PR leaves a perf data point behind.
 
 If a prior ``BENCH_*.json`` exists at the repo root, rows are compared
 against the newest one: a timing row that got more than ``--warn-pct``
 slower prints a warning, more than ``--fail-pct`` slower fails the job
-(new/removed suites are reported, never fatal). Serving metrics gate
+(new/removed suites are reported, never fatal). Baseline timings are
+first rescaled by a machine-speed factor — the ratio of the frozen
+matmul canary (``canary_us``, measured every run and stored in the
+JSON) between the two runs — so a CI-runner or container re-placement
+between PRs doesn't fail the gate on code that didn't change; the
+factor is clamped to [1, 3] and only ever forgives machine-wide drift. Serving metrics gate
 direction-aware at the same thresholds — queries/sec regresses downward,
 p50/p95 latency upward; ``train/`` step-time rows gate like any timing
 row. Kernel correctness artifacts (``*_maxerr``, ``*_mismatches``) are
 recorded but never timing-compared; a nonzero ``*_mismatches`` row fails
 the job outright (kernel bit-identity broken), and so does a compressed
 DCN payload less than 4x smaller than raw fp32 (the PR-5 acceptance
-floor on wire traffic).
+floor on wire traffic) or an OMS scanned/candidate fraction >= 1 (the
+PR-6 floor: the banded kernel must beat a full-bank scan).
 
 Usage:
   PYTHONPATH=src python scripts/bench_ci.py                # full gate
@@ -54,6 +63,65 @@ _ARTIFACT_RE = re.compile(r"(_maxerr|_mismatches)$")
 # jitter-floor demotion ceiling: a micro-row regression beyond this
 # relative slowdown fails even when its absolute delta is tiny
 _DEMOTE_MAX_DELTA = 2.0  # +200% == 3x
+# machine-speed normalization: timing rows compare against a
+# speed-adjusted baseline (prev * speed) so host drift — container
+# re-placement, a different CPU generation, BLAS/vector-ISA differences —
+# doesn't fail the gate on code that didn't change. The speed factor
+# comes from the frozen-matmul canary stored in each JSON; baselines that
+# predate ``canary_us`` fall back to the dense int8 dot row as a
+# retroactive probe (fixed shape since PR 4, pure matmul, no repo-code
+# dependence beyond ``dot_similarity``). Clamped to [1, _SPEED_CLAMP]:
+# a faster machine never relaxes the gate, and a broken probe can't
+# hide a blowup past 3x.
+_CANARY_PROXY_ROW = "kernels/dense_dot_int8_cpu"
+_SPEED_CLAMP = 3.0
+
+
+def machine_canary(warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time (us) of a frozen jitted float32 matmul.
+
+    The workload never changes with repo code, so the only thing that can
+    move it between two bench runs is the host itself — which makes the
+    pair (baseline canary, current canary) a measurement of machine
+    drift that ``compare`` can divide out of every timing row."""
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.standard_normal((64, 2048)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((2048, 2048)).astype(np.float32))
+    f = jax.jit(lambda x, y: x @ y)
+    for _ in range(warmup):
+        jax.block_until_ready(f(a, b))
+    times = []
+    for _ in range(iters):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(f(a, b))
+        times.append(_time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def machine_speed(baseline: dict, canary_us: float,
+                  rows: list[dict]) -> tuple[float, str]:
+    """(speed, source): this machine's slowdown factor vs the baseline's
+    machine (1.0 == same speed, 1.5 == CPU-bound rows should read ~1.5x
+    slower here), and where the estimate came from."""
+    old_canary = baseline.get("canary_us")
+    if old_canary:
+        s, src = canary_us / old_canary, "canary"
+    else:
+        old = {r["name"]: r["us_per_call"] for r in baseline.get("rows", [])}
+        prev = old.get(_CANARY_PROXY_ROW)
+        now = next((r["us_per_call"] for r in rows
+                    if r["name"] == _CANARY_PROXY_ROW), None)
+        if not prev or not now:
+            return 1.0, "none"
+        s, src = now / prev, "proxy " + _CANARY_PROXY_ROW
+    return min(max(s, 1.0), _SPEED_CLAMP), src
 
 
 def run_suites() -> list[dict]:
@@ -89,7 +157,10 @@ def run_suites() -> list[dict]:
 
 
 def serving_metrics() -> dict:
-    """Reduced multi-tenant serve_db run -> queries/sec + cache hit rate."""
+    """Reduced multi-tenant serve_db run -> queries/sec + cache hit rate,
+    plus an OMS pass (precursor-sorted bank, banded kernel) at a realistic
+    tolerance pair over a bank large enough that the banded scan is
+    genuinely sub-linear (``oms_scanned_fraction`` < 1 is a hard gate)."""
     from repro.launch import serve_db
     s = serve_db.main([
         "--reduced", "--hd-dim", "64", "--identities", "8", "--queries", "32",
@@ -97,6 +168,16 @@ def serving_metrics() -> dict:
         "--tenants", "2", "--cache-mb", "8", "--buckets", "2",
     ])
     qc = s["query_cache"] or {}
+    # OMS: big sorted bank (8192 rows = 64 kernel tiles), batch of 32
+    # precursor-sorted queries in 8-query blocks, window (-2.5, +150) Da
+    o = serve_db.main([
+        "--reduced", "--hd-dim", "256", "--identities", "1024",
+        "--refs-per-identity", "4", "--queries", "64", "--max-batch", "32",
+        "--k", "4", "--fdr", "0.5", "--flush-ms", "2", "--cache-mb", "8",
+        "--buckets", "1", "--fused", "--oms", "--tolerance", "2.5",
+        "--open-tol", "150",
+    ])
+    oms = o["oms"]
     return {
         "queries_per_sec": s["qps"],
         "p50_ms": s["p50_ms"],
@@ -106,6 +187,12 @@ def serving_metrics() -> dict:
         "cache_misses": qc.get("misses", 0),
         "bank_builds": s["banks"]["builds"],
         "tenants": len(s["tenants"]),
+        "oms_queries_per_sec": o["qps"],
+        "oms_p50_ms": o["p50_ms"],
+        "oms_p95_ms": o["p95_ms"],
+        "oms_candidate_fraction": oms["candidate_fraction"],
+        "oms_scanned_fraction": oms["scanned_fraction"],
+        "oms_no_candidate": oms["no_candidate"],
     }
 
 
@@ -216,8 +303,8 @@ def find_baseline(output: Path) -> Path | None:
 
 
 def compare(baseline: dict, current: list[dict], *, warn_pct: float,
-            fail_pct: float,
-            min_delta_us: float = 1000.0) -> tuple[list[str], list[str]]:
+            fail_pct: float, min_delta_us: float = 1000.0,
+            speed: float = 1.0) -> tuple[list[str], list[str]]:
     """(warnings, failures) from timing-row regressions vs the baseline.
 
     Percentage thresholds alone misfire on micro-rows (a 200 us
@@ -225,7 +312,12 @@ def compare(baseline: dict, current: list[dict], *, warn_pct: float,
     so a regression whose *absolute* slowdown is under ``min_delta_us``
     is demoted from failure to warning — still reported, never fatal.
     The demotion is capped: past ``_DEMOTE_MAX_DELTA`` (3x) even a
-    micro-row fails, so the floor cannot hide a genuine blowup."""
+    micro-row fails, so the floor cannot hide a genuine blowup.
+
+    ``speed`` (from ``machine_speed``) rescales every baseline timing
+    before comparison: only the machine-wide drift it measures is
+    forgiven, so a code regression in one row still stands out against
+    the speed-adjusted baseline."""
     old = {r["name"]: r["us_per_call"] for r in baseline.get("rows", [])}
     warnings, failures = [], []
     for row in current:
@@ -237,11 +329,13 @@ def compare(baseline: dict, current: list[dict], *, warn_pct: float,
             continue
         if prev <= 0:
             continue
-        delta = row["us_per_call"] / prev - 1.0
+        adj = prev * speed
+        delta = row["us_per_call"] / adj - 1.0
         msg = (f"{row['name']}: {prev:.0f} -> {row['us_per_call']:.0f} us "
-               f"({delta:+.1%})")
+               f"({delta:+.1%}" + ("" if speed == 1.0 else
+                                   " vs speed-adjusted baseline") + ")")
         if delta > fail_pct:
-            if (row["us_per_call"] - prev < min_delta_us
+            if (row["us_per_call"] - adj < min_delta_us
                     and delta <= _DEMOTE_MAX_DELTA):
                 warnings.append(msg + " [below jitter floor, demoted]")
             else:
@@ -254,11 +348,16 @@ def compare(baseline: dict, current: list[dict], *, warn_pct: float,
 
 
 # serving metrics are direction-aware: throughput regresses downward,
-# latency regresses upward; both gate at the same warn/fail thresholds
+# latency regresses upward; both gate at the same warn/fail thresholds.
+# The oms_* rows gate the open-modification serving path independently of
+# the exact-search path (missing in pre-PR-6 baselines: skipped, not fatal).
 _SERVING_DIRECTIONS = {
     "queries_per_sec": "higher",
     "p50_ms": "lower",
     "p95_ms": "lower",
+    "oms_queries_per_sec": "higher",
+    "oms_p50_ms": "lower",
+    "oms_p95_ms": "lower",
 }
 
 
@@ -284,6 +383,25 @@ def compare_serving(baseline: dict, serving: dict | None, *, warn_pct: float,
         elif delta > warn_pct:
             warnings.append(msg)
     return warnings, failures
+
+
+def oms_failures(serving: dict | None) -> list[str]:
+    """Hard failures from the OMS serving floor: the banded kernel must do
+    strictly less work than a full-bank scan (scanned fraction < 1) on a
+    window that is itself selective (candidate fraction < 1). Checked
+    whenever the OMS run ran, baseline or not."""
+    if not serving or "oms_scanned_fraction" not in serving:
+        return []
+    fails = []
+    if serving["oms_scanned_fraction"] >= 1.0:
+        fails.append(f"oms: scanned fraction "
+                     f"{serving['oms_scanned_fraction']:.3f} >= 1 "
+                     "(banded kernel degenerated to a full-bank scan)")
+    if serving["oms_candidate_fraction"] >= 1.0:
+        fails.append(f"oms: candidate fraction "
+                     f"{serving['oms_candidate_fraction']:.3f} >= 1 "
+                     "(precursor window admits the whole bank)")
+    return fails
 
 
 def artifact_failures(rows: list[dict]) -> list[str]:
@@ -339,6 +457,7 @@ def main(argv=None) -> int:
         "schema": 1,
         "source": "scripts/bench_ci.py",
         "quick": True,
+        "canary_us": machine_canary(),
         "rows": rows,
         "serving": None if args.skip_serving else serving_metrics(),
         "train": train,
@@ -347,12 +466,15 @@ def main(argv=None) -> int:
     print(f"wrote {args.output} ({len(rows)} timing rows"
           + ("" if args.skip_serving else
          f", serving {result['serving']['queries_per_sec']:.1f} q/s, "
-         f"cache hit rate {result['serving']['cache_hit_rate']:.1%}")
+         f"cache hit rate {result['serving']['cache_hit_rate']:.1%}, "
+         f"oms {result['serving']['oms_queries_per_sec']:.1f} q/s scanning "
+         f"{result['serving']['oms_scanned_fraction']:.0%} of the bank")
           + ("" if args.skip_train else
          f", train DCN {max(v['reduction_x'] for k, v in train.items() if k != 'none'):.1f}x compressed")
           + ")")
 
-    hard_failures = artifact_failures(rows) + train_failures(train)
+    hard_failures = (artifact_failures(rows) + train_failures(train)
+                     + oms_failures(result["serving"]))
 
     base_path = args.baseline or find_baseline(args.output)
     if base_path is None:
@@ -361,15 +483,17 @@ def main(argv=None) -> int:
             print(f"  FAIL  {f}")
         return 1 if hard_failures else 0
     baseline = json.loads(base_path.read_text())
+    speed, speed_src = machine_speed(baseline, result["canary_us"], rows)
     warnings, failures = compare(baseline, rows, warn_pct=args.warn_pct,
                                  fail_pct=args.fail_pct,
-                                 min_delta_us=args.min_delta_us)
+                                 min_delta_us=args.min_delta_us, speed=speed)
     failures = hard_failures + failures
     sw, sf = compare_serving(baseline, result["serving"],
                              warn_pct=args.warn_pct, fail_pct=args.fail_pct)
     warnings += sw
     failures += sf
-    print(f"compared against {base_path.name}: "
+    print(f"compared against {base_path.name} "
+          f"(machine speed {speed:.2f}x baseline, via {speed_src}): "
           f"{len(failures)} failure(s), {len(warnings)} warning(s)")
     for w in warnings:
         print(f"  WARN  {w}")

@@ -148,6 +148,7 @@ class SearchReport:
     num_identified: int
     recall: float                # vs ground truth, over accepted
     cost: "energy_mod.CostReport"
+    num_no_candidate: int = 0    # queries with an empty precursor window
 
 
 def run_db_search(
@@ -179,7 +180,13 @@ def run_db_search(
     match_idx = jnp.argmax(s_t, axis=1)
     is_target = best_t > best_d
     best = jnp.maximum(best_t, best_d)
-    accept = fdr_filter(best, is_target, fdr=fdr)
+    # Queries with an empty candidate window match nothing — excluding them
+    # from the FDR estimate (rather than letting their best_t == best_d tie
+    # count as a decoy win) keeps the decoy count honest. They stay in the
+    # matches array (as -1) and in the recall denominator: an unmatchable
+    # query is still an unidentified spectrum.
+    has_candidate = mask.any(axis=1)
+    accept = fdr_filter(best, is_target, fdr=fdr, valid=has_candidate)
 
     matches = np.where(np.asarray(accept), np.asarray(match_idx), -1)
     recall = 0.0
@@ -200,4 +207,5 @@ def run_db_search(
     return SearchReport(
         matches=matches, accepted=np.asarray(accept),
         num_identified=int(np.asarray(accept).sum()), recall=recall, cost=cost,
+        num_no_candidate=int((~np.asarray(has_candidate)).sum()),
     )

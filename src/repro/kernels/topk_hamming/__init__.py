@@ -1,3 +1,11 @@
-from repro.kernels.topk_hamming.ops import topk_hamming_pallas
+from repro.kernels.topk_hamming.ops import (
+    canonicalize_overflow_slots,
+    topk_hamming_banded_pallas,
+    topk_hamming_pallas,
+)
 
-__all__ = ["topk_hamming_pallas"]
+__all__ = [
+    "canonicalize_overflow_slots",
+    "topk_hamming_banded_pallas",
+    "topk_hamming_pallas",
+]

@@ -1,4 +1,4 @@
-"""Public jit'd wrapper for the fused streaming top-k Hamming kernel."""
+"""Public jit'd wrappers for the fused streaming top-k Hamming kernels."""
 
 from __future__ import annotations
 
@@ -7,7 +7,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.topk_hamming.topk_hamming import topk_hamming_pallas_call
+from repro.kernels.topk_hamming.topk_hamming import (
+    topk_hamming_banded_pallas_call,
+    topk_hamming_pallas_call,
+)
+
+_SENTINEL = jnp.iinfo(jnp.int32).min
 
 
 def _default_interpret() -> bool:
@@ -79,3 +84,133 @@ def topk_hamming_pallas(
         q, r, nv, dim=dim, k=k, block_q=bq, block_r=br,
         word_chunk=word_chunk, interpret=interpret)
     return idx[:Q], vals[:Q]
+
+
+def canonicalize_overflow_slots(idx: jax.Array, vals: jax.Array,
+                                starts: jax.Array, ends: jax.Array,
+                                num_rows: int | jax.Array) -> jax.Array:
+    """Rewrite sentinel-valued top-k slots to the oracle's overflow indices.
+
+    ``lax.top_k`` over a banded-masked score matrix fills slots past the
+    band's width with the lowest-index *masked* columns (ties at the
+    sentinel break by ascending index). The banded kernel never visits most
+    masked columns, so its overflow slots carry arbitrary filler indices;
+    this rewrites them to the m-th smallest row outside the bands — making
+    banded results bit-identical to the masked full matrix, overflow slots
+    included.
+
+    starts/ends: (B, Q) ascending disjoint bands per query (clipped to
+    ``num_rows``). Returns idx with sentinel slots canonicalized.
+    """
+    if starts.ndim == 1:
+        starts = starts[None, :]
+        ends = ends[None, :]
+    sentinel = vals == _SENTINEL
+    n_real = jnp.sum(~sentinel, axis=1, keepdims=True)
+    k = idx.shape[1]
+    m = jnp.arange(k, dtype=jnp.int32)[None, :] - n_real  # rank among masked
+    # masked rows form B+1 runs: [0, s_0), [e_0, s_1), ..., [e_{B-1}, rows)
+    num_bands = starts.shape[0]
+    run_start = [jnp.zeros_like(starts[0])]
+    run_len = []
+    for b in range(num_bands):
+        run_len.append(starts[b] - run_start[-1])
+        run_start.append(ends[b])
+    rows = jnp.asarray(num_rows, jnp.int32)
+    run_len.append(rows - run_start[-1])
+    col = jnp.zeros_like(m)
+    cum = jnp.zeros_like(starts[0])
+    done = jnp.zeros(m.shape, bool)
+    for rs, rl in zip(run_start, run_len):
+        in_run = ~done & (m < (cum + rl)[:, None])
+        col = jnp.where(in_run, rs[:, None] + (m - cum[:, None]), col)
+        done = done | in_run
+        cum = cum + rl
+    return jnp.where(sentinel, col, idx)
+
+
+@partial(jax.jit, static_argnames=("dim", "k", "num_tiles", "block_q",
+                                   "block_r", "word_chunk", "interpret",
+                                   "canonicalize"))
+def topk_hamming_banded_pallas(
+    q: jax.Array,
+    r: jax.Array,
+    starts: jax.Array,
+    lens: jax.Array,
+    *,
+    dim: int,
+    k: int,
+    num_valid: jax.Array | int | None = None,
+    num_tiles: int | None = None,
+    block_q: int = 128,
+    block_r: int = 128,
+    word_chunk: int = 32,
+    interpret: bool | None = None,
+    canonicalize: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Banded fused top-k: each query scores only reference rows in its own
+    ``[starts[q], starts[q] + lens[q])`` band (an OMS precursor window over
+    a precursor-sorted bank).
+
+    Bit-identical to sentinel-masking the full (Q, R) score matrix outside
+    the band (and at or past ``num_valid``) and running ``lax.top_k`` — tie
+    order and, with ``canonicalize=True``, overflow slots included — but
+    only ``num_tiles`` R tiles per Q block are fetched and scored.
+
+    num_tiles: static per-Q-block tile budget. Every query's (clipped) band
+      in a Q block must fit in ``num_tiles * block_r`` rows starting at the
+      block's lowest band start — callers compute it host-side from the
+      batch's windows (``repro.serve.oms.plan_candidates``). ``None`` scans
+      the full bank (always correct, no work saved).
+    canonicalize: rewrite sentinel overflow slots (band narrower than k) to
+      the oracle's ascending masked indices. Per-shard callers that merge
+      and canonicalize globally switch this off.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if q.ndim != 2 or r.ndim != 2 or q.shape[1] != r.shape[1]:
+        raise ValueError(f"bad operand shapes {q.shape} x {r.shape}")
+    if q.dtype != r.dtype:
+        raise ValueError(f"dtype mismatch {q.dtype} vs {r.dtype}")
+    packed = q.dtype == jnp.uint32
+    if not packed and q.dtype != jnp.int8:
+        raise ValueError(f"expected uint32 (packed) or int8, got {q.dtype}")
+    Q, W = q.shape
+    R = r.shape[0]
+    if not 1 <= k <= R:
+        raise ValueError(f"k={k} must be in [1, {R}]")
+    if starts.shape != (Q,) or lens.shape != (Q,):
+        raise ValueError(
+            f"starts/lens must be ({Q},), got {starts.shape}/{lens.shape}")
+
+    bq = min(block_q, _round_up(Q, 8))
+    br = min(block_r, _round_up(R, 128))
+    lane = word_chunk if packed else 128
+    pq, pr, pw = (-Q) % bq, (-R) % br, (-W) % lane
+    if pq or pw:
+        q = jnp.pad(q, ((0, pq), (0, pw)))
+    if pr or pw:
+        r = jnp.pad(r, ((0, pr), (0, pw)))
+
+    nv = R if num_valid is None else num_valid
+    nv = jnp.minimum(jnp.asarray(nv, jnp.int32), R)
+    s = jnp.clip(starts.astype(jnp.int32), 0, nv)
+    e = jnp.clip(starts.astype(jnp.int32) + lens.astype(jnp.int32), s, nv)
+    # edge-pad so padded queries inherit a real band and don't widen the
+    # per-block tile span
+    if pq:
+        s = jnp.pad(s, (0, pq), mode="edge")
+        e = jnp.pad(e, (0, pq), mode="edge")
+
+    total_tiles = (R + pr) // br
+    nt = total_tiles if num_tiles is None else min(num_tiles, total_tiles)
+    tb = jnp.min(s.reshape(-1, bq) // br, axis=1)
+    tb = jnp.clip(tb, 0, total_tiles - nt).astype(jnp.int32)
+
+    vals, idx = topk_hamming_banded_pallas_call(
+        q, r, tb, s[:, None], e[:, None], dim=dim, k=k, num_tiles=nt,
+        block_q=bq, block_r=br, word_chunk=word_chunk, interpret=interpret)
+    idx, vals = idx[:Q], vals[:Q]
+    if canonicalize:
+        idx = canonicalize_overflow_slots(idx, vals, s[:Q], e[:Q], R)
+    return idx, vals

@@ -35,3 +35,28 @@ def topk_hamming_ref(q: jnp.ndarray, r: jnp.ndarray, dim: int, k: int,
         scores = jnp.where(col[None, :] < num_valid, scores, _SENTINEL)
     vals, idx = jax.lax.top_k(scores, k)
     return idx.astype(jnp.int32), vals
+
+
+def topk_hamming_banded_ref(q: jnp.ndarray, r: jnp.ndarray,
+                            starts: jnp.ndarray, lens: jnp.ndarray,
+                            dim: int, k: int,
+                            num_valid: int | jnp.ndarray | None = None
+                            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked-full-matrix oracle for the banded kernel: columns outside each
+    query's ``[starts[q], starts[q] + lens[q])`` band (or at/past
+    ``num_valid``) mask to the sentinel before ``lax.top_k``."""
+    if q.dtype == jnp.uint32:
+        x = q[:, None, :] ^ r[None, :, :]
+        dist = jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+        scores = dim - 2 * dist
+    else:
+        scores = jnp.einsum("qd,rd->qr", q.astype(jnp.int32),
+                            r.astype(jnp.int32),
+                            preferred_element_type=jnp.int32)
+    col = jnp.arange(r.shape[0], dtype=jnp.int32)[None, :]
+    band = (col >= starts[:, None]) & (col < (starts + lens)[:, None])
+    if num_valid is not None:
+        band = band & (col < num_valid)
+    scores = jnp.where(band, scores, _SENTINEL)
+    vals, idx = jax.lax.top_k(scores, k)
+    return idx.astype(jnp.int32), vals

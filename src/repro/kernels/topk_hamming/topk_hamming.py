@@ -58,6 +58,30 @@ def _select_topk(vals: jax.Array, idx: jax.Array, k: int
     return jnp.concatenate(out_v, axis=1), jnp.concatenate(out_i, axis=1)
 
 
+def _tile_scores(q_ref, r_ref, *, dim: int, word_chunk: int, packed: bool
+                 ) -> jax.Array:
+    """(bq, br) int32 similarity tile: XOR+popcount on the bipolar dot scale
+    for packed uint32 inputs, a plain integer dot for int8."""
+    bq = q_ref.shape[0]
+    br = r_ref.shape[0]
+    if packed:
+        n_words = q_ref.shape[1]
+
+        def body(c, acc):
+            w0 = c * word_chunk
+            qc = q_ref[:, pl.dslice(w0, word_chunk)]   # (bq, wc) uint32
+            rc = r_ref[:, pl.dslice(w0, word_chunk)]   # (br, wc)
+            x = qc[:, None, :] ^ rc[None, :, :]        # (bq, br, wc)
+            return acc + jax.lax.population_count(x).astype(jnp.int32).sum(-1)
+
+        acc = jax.lax.fori_loop(0, n_words // word_chunk, body,
+                                jnp.zeros((bq, br), jnp.int32))
+        return dim - 2 * acc  # <q, r> for bipolar HVs, exactly
+    return jax.lax.dot_general(
+        q_ref[...], r_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
 def _topk_kernel(nv_ref, q_ref, r_ref, ovals_ref, oidx_ref,
                  svals_ref, sidx_ref, *, dim: int, k: int, block_r: int,
                  word_chunk: int, packed: bool, r_padded: int):
@@ -74,23 +98,8 @@ def _topk_kernel(nv_ref, q_ref, r_ref, ovals_ref, oidx_ref,
         sidx_ref[...] = r_padded + jax.lax.broadcasted_iota(
             jnp.int32, (bq, k), 1)
 
-    if packed:
-        n_words = q_ref.shape[1]
-
-        def body(c, acc):
-            w0 = c * word_chunk
-            qc = q_ref[:, pl.dslice(w0, word_chunk)]   # (bq, wc) uint32
-            rc = r_ref[:, pl.dslice(w0, word_chunk)]   # (br, wc)
-            x = qc[:, None, :] ^ rc[None, :, :]        # (bq, br, wc)
-            return acc + jax.lax.population_count(x).astype(jnp.int32).sum(-1)
-
-        acc = jax.lax.fori_loop(0, n_words // word_chunk, body,
-                                jnp.zeros((bq, br), jnp.int32))
-        scores = dim - 2 * acc  # <q, r> for bipolar HVs, exactly
-    else:
-        scores = jax.lax.dot_general(
-            q_ref[...], r_ref[...], (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.int32)
+    scores = _tile_scores(q_ref, r_ref, dim=dim, word_chunk=word_chunk,
+                          packed=packed)
 
     col = j * block_r + jax.lax.broadcasted_iota(jnp.int32, (bq, br), 1)
     scores = jnp.where(col < nv_ref[0], scores, _SENTINEL)
@@ -151,3 +160,111 @@ def topk_hamming_pallas_call(
         ],
         interpret=interpret,
     )(num_valid, q, r)
+
+
+def _topk_banded_kernel(tb_ref, q_ref, r_ref, starts_ref, ends_ref,
+                        ovals_ref, oidx_ref, svals_ref, sidx_ref, *,
+                        dim: int, k: int, block_r: int, word_chunk: int,
+                        packed: bool, r_padded: int):
+    """Banded variant: only ``num_tiles`` R tiles per Q block are visited,
+    starting at the scalar-prefetched ``tb_ref[i]`` (OMS precursor windows).
+
+    ``tb_ref`` generalizes the full kernel's traced ``num_valid`` scalar:
+    instead of one mask bound for the whole grid, each Q block gets a tile
+    base from SMEM (it steers the R BlockSpec index_map, so out-of-window
+    tiles are never even fetched) and each query row gets its own
+    ``[start, end)`` bounds. Columns outside the band mask to the sentinel
+    exactly like ``num_valid`` padding — the merge is unchanged, so the
+    result is bit-identical to masking the full score matrix.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bq = q_ref.shape[0]
+    br = r_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _():
+        svals_ref[...] = jnp.full((bq, k), _SENTINEL, jnp.int32)
+        sidx_ref[...] = r_padded + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, k), 1)
+
+    scores = _tile_scores(q_ref, r_ref, dim=dim, word_chunk=word_chunk,
+                          packed=packed)
+
+    tile = tb_ref[i] + j
+    col = tile * block_r + jax.lax.broadcasted_iota(jnp.int32, (bq, br), 1)
+    in_band = (col >= starts_ref[...]) & (col < ends_ref[...])
+    scores = jnp.where(in_band, scores, _SENTINEL)
+    svals, sidx = _select_topk(
+        jnp.concatenate([svals_ref[...], scores], axis=1),
+        jnp.concatenate([sidx_ref[...], col], axis=1), k)
+    svals_ref[...] = svals
+    sidx_ref[...] = sidx
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        ovals_ref[...] = svals
+        oidx_ref[...] = sidx
+
+
+def topk_hamming_banded_pallas_call(
+    q: jax.Array,          # (Q, W) uint32 packed, or (Q, D) int8
+    r: jax.Array,          # (R, W) uint32 packed, or (R, D) int8
+    tile_base: jax.Array,  # (Q // block_q,) int32 first R tile per Q block
+    starts: jax.Array,     # (Q, 1) int32 per-query band start row
+    ends: jax.Array,       # (Q, 1) int32 per-query band end row (exclusive)
+    *,
+    dim: int,
+    k: int,
+    num_tiles: int,
+    block_q: int = 128,
+    block_r: int = 128,
+    word_chunk: int = 32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Banded streaming top-k: grid (Q blocks, num_tiles), scanning only
+    tiles ``[tile_base[i], tile_base[i] + num_tiles)`` per Q block.
+
+    Caller contract: for every Q block i, every query's ``[start, end)``
+    must lie inside the scanned rows
+    ``[tile_base[i] * block_r, (tile_base[i] + num_tiles) * block_r)``
+    and ``tile_base[i] + num_tiles <= R // block_r`` — band rows outside
+    the scanned window would be silently skipped.
+    """
+    Q, W = q.shape
+    R = r.shape[0]
+    packed = q.dtype == jnp.uint32
+    assert Q % block_q == 0 and R % block_r == 0
+    assert not packed or W % word_chunk == 0
+    assert 1 <= num_tiles <= R // block_r
+
+    kernel = functools.partial(
+        _topk_banded_kernel, dim=dim, k=k, block_r=block_r,
+        word_chunk=word_chunk, packed=packed, r_padded=R)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q // block_q, num_tiles),
+        in_specs=[
+            pl.BlockSpec((block_q, W), lambda i, j, tb: (i, 0)),
+            pl.BlockSpec((block_r, W), lambda i, j, tb: (tb[i] + j, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j, tb: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j, tb: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j, tb: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j, tb: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.int32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tile_base, q, r, starts, ends)

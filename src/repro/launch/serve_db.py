@@ -28,7 +28,13 @@ import numpy as np
 from repro.core import SpecPCMConfig, encode_and_pack
 from repro.dist.sharding import set_mesh
 from repro.launch.mesh import make_debug_mesh
-from repro.serve import BankRegistry, DBSearchServer, search_with_fdr
+from repro.serve import (
+    BankRegistry,
+    DBSearchServer,
+    OMSConfig,
+    oms_search_with_fdr,
+    search_with_fdr,
+)
 from repro.spectra import SyntheticMSConfig, generate_dataset
 from repro.spectra.fdr import make_decoys
 from repro.spectra.synthetic import generate_query_set
@@ -68,6 +74,18 @@ def main(argv=None):
     ap.add_argument("--max-banks", type=int, default=None,
                     help="LRU-evict cold built banks beyond this many "
                          "(default: keep all)")
+    ap.add_argument("--oms", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="open-modification serving mode: banks are "
+                         "precursor-sorted and each query scans only its "
+                         "precursor window (query - ref in "
+                         "(-tolerance, open-tol))")
+    ap.add_argument("--tolerance", type=float, default=20.0,
+                    help="precursor tolerance on the light side (and both "
+                         "sides for exact search)")
+    ap.add_argument("--open-tol", type=float, default=200.0,
+                    help="how much heavier than a reference an OMS query "
+                         "may be (the modification-mass budget)")
     args = ap.parse_args(argv)
 
     if args.tenants < 1:
@@ -99,35 +117,54 @@ def main(argv=None):
     registry = BankRegistry(mesh=mesh, pack=pack, max_banks=args.max_banks,
                             fused=args.fused)
 
-    datasets, query_pools = {}, {}
+    # OMS traffic: modified queries carry a heavier precursor (a phospho-like
+    # mass addition), the case the open window exists for.
+    oms_cfg = (OMSConfig(tol=args.tolerance, open_tol=args.open_tol)
+               if args.oms else None)
+    mod_range = (60.0, 0.75 * args.open_tol) if args.oms else (0.0, 0.0)
+
+    datasets, query_pools, precursor_pools = {}, {}, {}
     for t in range(args.tenants):
         tenant = f"tenant{t}"
         ms = SyntheticMSConfig(num_identities=n_id,
                                spectra_per_identity=per_id,
-                               num_bins=num_bins, seed=args.seed + 31 * t)
+                               num_bins=num_bins, seed=args.seed + 31 * t,
+                               modification_mass_range=mod_range)
         ds = generate_dataset(ms)
         refs_hv = encode_and_pack(ds.spectra, cfg)
         decoys_hv = encode_and_pack(make_decoys(ds.spectra), cfg)
-        registry.register(tenant, refs_hv, decoys=decoys_hv, pin=t == 0)
+        registry.register(tenant, refs_hv, decoys=decoys_hv, pin=t == 0,
+                          precursor=(np.asarray(ds.precursor)
+                                     if args.oms else None))
         qs = generate_query_set(ds, ms, num_queries=n_q,
                                 seed=args.seed + 31 * t + 1)
         datasets[tenant] = (np.asarray(ds.identity), np.asarray(qs.identity))
         query_pools[tenant] = np.asarray(encode_and_pack(qs.spectra, cfg))
+        precursor_pools[tenant] = np.asarray(qs.precursor, np.float32)
     print(f"{args.tenants} tenant bank(s) registered (lazy; built on first "
-          f"request), D={dim}, pack={pack}, fused={args.fused}")
+          f"request), D={dim}, pack={pack}, fused={args.fused}, "
+          f"oms={args.oms}")
 
     server = DBSearchServer(
         registry, k=args.k, fdr=args.fdr, max_batch_size=max_batch,
         flush_timeout_s=args.flush_ms / 1e3,
         cache_bytes=int(args.cache_mb * 2**20) or None,
-        buckets=args.buckets, fairness_cap=args.fairness_cap)
+        buckets=args.buckets, fairness_cap=args.fairness_cap, oms=oms_cfg)
 
     # warm the jit cache on the hot tenant (search + FDR routing) for the
     # largest bucket so latency numbers measure serving, not compile; cold
     # tenants pay their lazy shard+compile on first flush by design.
     db0 = registry.get("tenant0")
-    search_with_fdr(db0, jnp.zeros((max_batch, dim), jnp.int8), k=args.k,
-                    fdr=args.fdr)
+    if args.oms:
+        warm_prec = precursor_pools["tenant0"][:max_batch]
+        if warm_prec.shape[0] < max_batch:
+            warm_prec = np.resize(warm_prec, max_batch)
+        oms_search_with_fdr(db0, jnp.zeros((max_batch, dim), jnp.int8),
+                            np.sort(warm_prec), k=args.k, fdr=args.fdr,
+                            cfg=oms_cfg)
+    else:
+        search_with_fdr(db0, jnp.zeros((max_batch, dim), jnp.int8), k=args.k,
+                        fdr=args.fdr)
 
     # bursty, hot-tenant-skewed traffic; queries drawn WITH replacement so
     # repeats exercise the content-hash cache.
@@ -146,7 +183,10 @@ def main(argv=None):
         for _ in range(min(burst, total - sent)):
             tenant = tenant_names[int(rng.choice(args.tenants, p=probs))]
             qi = int(rng.integers(0, query_pools[tenant].shape[0]))
-            rid = server.submit(query_pools[tenant][qi], tenant=tenant)
+            rid = server.submit(
+                query_pools[tenant][qi], tenant=tenant,
+                precursor=(float(precursor_pools[tenant][qi])
+                           if args.oms else None))
             meta[rid] = (tenant, qi)
             sent += 1
         done.extend(server.step())
@@ -186,6 +226,12 @@ def main(argv=None):
         print(f"  {tenant}: {ts['count']} reqs, p50 {ts['p50_ms']:.2f} ms, "
               f"p95 {ts['p95_ms']:.2f} ms, "
               f"cache hit rate {ts['cache_hit_rate']:.1%}")
+    o = s.get("oms")
+    if o is not None:
+        print(f"oms: window (-{o['tol']:g}, +{o['open_tol']:g}), candidate "
+              f"fraction {o['candidate_fraction']:.3f}, scanned fraction "
+              f"{o['scanned_fraction']:.3f}, {o['no_candidate']} queries "
+              f"with empty windows")
     print(f"identified at {args.fdr:.0%} FDR: {accepted}/{total} "
           f"({correct} correct identity)")
     return s

@@ -31,11 +31,22 @@ from repro.serve.db_search import (
     bucket_for,
     encode_queries,
     make_buckets,
+    oms_plan,
+    oms_search,
+    oms_search_encoded,
+    oms_search_with_fdr,
     search_database,
     search_database_encoded,
     search_with_fdr,
     shard_database,
     sharded_topk_search,
+)
+from repro.serve.oms import (
+    OMSConfig,
+    OMSPlan,
+    PrecursorIndex,
+    build_precursor_index,
+    plan_candidates,
 )
 from repro.serve.queue import LatencyStats, MicroBatchQueue, Request
 
@@ -44,12 +55,21 @@ __all__ = [
     "DBSearchServer",
     "LatencyStats",
     "MicroBatchQueue",
+    "OMSConfig",
+    "OMSPlan",
+    "PrecursorIndex",
     "QueryHVCache",
     "Request",
     "ShardedDatabase",
     "bucket_for",
+    "build_precursor_index",
     "encode_queries",
     "make_buckets",
+    "oms_plan",
+    "oms_search",
+    "oms_search_encoded",
+    "oms_search_with_fdr",
+    "plan_candidates",
     "search_database",
     "search_database_encoded",
     "search_with_fdr",

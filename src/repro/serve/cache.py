@@ -155,6 +155,8 @@ class _BankSpec:
     decoys: Any | None
     dim: int
     pinned: bool = False
+    precursor: Any | None = None        # target precursor masses (OMS)
+    decoy_precursor: Any | None = None  # decoy precursor masses (OMS)
 
 
 class BankRegistry:
@@ -191,13 +193,18 @@ class BankRegistry:
         return list(self._specs)
 
     def register(self, tenant: str, refs, decoys=None, *,
-                 pin: bool = False) -> None:
+                 pin: bool = False, precursor=None,
+                 decoy_precursor=None) -> None:
         """Record a tenant's bank recipe (no sharding/packing happens yet).
 
+        With ``precursor`` (per-target masses; ``decoy_precursor``
+        defaulting to the same array), the built bank carries the
+        precursor-sorted OMS index (see :mod:`repro.serve.oms`).
         Re-registering replaces the spec and drops any stale built bank.
         """
         self._specs[tenant] = _BankSpec(
-            refs=refs, decoys=decoys, dim=int(refs.shape[-1]), pinned=pin)
+            refs=refs, decoys=decoys, dim=int(refs.shape[-1]), pinned=pin,
+            precursor=precursor, decoy_precursor=decoy_precursor)
         self._built.pop(tenant, None)
 
     def adopt(self, tenant: str, db, *, pin: bool = True) -> None:
@@ -236,7 +243,8 @@ class BankRegistry:
             db = shard_database(spec.refs, decoys=spec.decoys, mesh=self.mesh,
                                 axis=self.axis, pack=self.pack,
                                 emulate_shards=self.emulate_shards,
-                                fused=self.fused)
+                                fused=self.fused, precursor=spec.precursor,
+                                decoy_precursor=spec.decoy_precursor)
             self.builds += 1
             self._built[tenant] = db
         else:

@@ -72,10 +72,24 @@ from repro.core.hd.similarity import (
     topk_search,
 )
 from repro.serve.cache import BankRegistry, QueryHVCache
+from repro.serve.oms import (
+    OMSConfig,
+    OMSPlan,
+    PrecursorIndex,
+    build_precursor_index,
+    plan_candidates,
+)
 from repro.serve.queue import LatencyStats, MicroBatchQueue, Request
 from repro.spectra.fdr import fdr_filter
 
 _SENTINEL = jnp.iinfo(jnp.int32).min
+_OMS_ALIGN = 128  # shard_rows alignment for OMS banks (= kernel block_r), so
+                  # shard bases stay tile-aligned and per-shard band spans
+                  # never exceed the host-side plan's tile budget
+_OMS_BLOCK_Q = 8  # banded-kernel Q-block: the tile budget is per Q block, so
+                  # narrow blocks of precursor-adjacent queries (the server
+                  # sorts each batch) keep the scanned span near the window
+                  # width instead of the batch's full mass spread
 
 
 # --------------------------------------------------------------------------
@@ -139,6 +153,68 @@ def _merge_topk(cand_vals, cand_idx, k: int):
     return idx, vals
 
 
+def _local_oms_topk(q_enc, refs_local, base, k: int, num_rows: int, dim: int,
+                    packed: bool, starts, ends):
+    """Unfused per-shard OMS top-k: full local scores, sentinel-masked
+    outside every query's per-block band (global sorted-layout rows in
+    ``starts``/``ends``, each (B, Q)) and past ``num_rows``.
+
+    This *is* the masked-full-matrix oracle restricted to one shard — the
+    banded kernel below must match it bit-exactly.
+    """
+    scores = _local_scores(q_enc, refs_local, dim=dim, packed=packed)
+    shard_rows = refs_local.shape[0]
+    col = (jnp.asarray(base, jnp.int32)
+           + jnp.arange(shard_rows, dtype=jnp.int32))[None, :]
+    band = jnp.zeros(scores.shape, bool)
+    for b in range(starts.shape[0]):  # static B (1 or 2) bands per query
+        band = band | ((col >= starts[b][:, None]) & (col < ends[b][:, None]))
+    scores = jnp.where(band & (col < num_rows), scores, _SENTINEL)
+    vals, local_idx = jax.lax.top_k(scores, k)
+    return vals, local_idx.astype(jnp.int32) + jnp.asarray(base, jnp.int32)
+
+
+def _local_oms_topk_fused(q_enc, refs_local, base, k: int, num_rows: int,
+                          dim: int, starts, ends, num_tiles: int):
+    """Banded-kernel twin of ``_local_oms_topk``: one kernel launch per
+    band (decoy block, target block), each scanning only ``num_tiles`` R
+    tiles around that band, then a local merge over the 2k candidates.
+
+    Band blocks concatenate in ascending global-row order (decoy rows
+    precede target rows in the sorted layout) so the merge's positional
+    tie-break keeps the global ascending-index tie-break. Overflow slots
+    keep their kernel fillers — sentinel-valued, overwritten by the
+    caller's global canonicalization — hence ``canonicalize=False``.
+    """
+    from repro.kernels.topk_hamming import topk_hamming_banded_pallas
+    shard_rows = refs_local.shape[0]
+    nv = jnp.clip(jnp.asarray(num_rows - base, jnp.int32), 0, shard_rows)
+    vals_blocks, idx_blocks = [], []
+    for b in range(starts.shape[0]):
+        s_l = jnp.clip(starts[b] - base, 0, shard_rows).astype(jnp.int32)
+        e_l = jnp.clip(ends[b] - base, s_l, shard_rows).astype(jnp.int32)
+        idx, vals = topk_hamming_banded_pallas(
+            q_enc, refs_local, s_l, e_l - s_l, dim=dim, k=k, num_valid=nv,
+            num_tiles=num_tiles, block_q=_OMS_BLOCK_Q, canonicalize=False)
+        vals_blocks.append(vals)
+        idx_blocks.append(idx + jnp.asarray(base, jnp.int32))
+    if len(vals_blocks) == 1:
+        return vals_blocks[0], idx_blocks[0]
+    idx, vals = _merge_topk(jnp.concatenate(vals_blocks, axis=1),
+                            jnp.concatenate(idx_blocks, axis=1), k)
+    return vals, idx
+
+
+def _local_oms(q_enc, refs_local, base, k: int, num_rows: int, dim: int,
+               packed: bool, fused: bool, starts, ends, num_tiles: int):
+    """Per-shard OMS top-k, fused or unfused. Returns (vals, global_idx)."""
+    if fused:
+        return _local_oms_topk_fused(q_enc, refs_local, base, k, num_rows,
+                                     dim, starts, ends, num_tiles)
+    return _local_oms_topk(q_enc, refs_local, base, k, num_rows, dim,
+                           packed, starts, ends)
+
+
 # --------------------------------------------------------------------------
 # sharded database
 # --------------------------------------------------------------------------
@@ -150,6 +226,12 @@ class ShardedDatabase:
     data holds ``num_shards * shard_rows`` rows (zero-padded past
     ``num_rows``), bit-packed to uint32 words when ``packed``; rows
     ``[0, num_decoys)`` are decoys, ``[num_decoys, num_rows)`` targets.
+
+    With ``oms`` set (the bank was built with ``precursor=``), each block
+    is stored sorted by precursor mass and ``oms.perm`` maps sorted rows
+    back to original block rows — search results from the OMS routes are
+    translated before they leave :func:`oms_search_encoded`, so callers
+    always see original row numbering.
     """
 
     data: jax.Array
@@ -162,6 +244,7 @@ class ShardedDatabase:
     axis: str
     emulated_shards: int = 1
     fused: bool = False
+    oms: PrecursorIndex | None = None
 
     @property
     def num_targets(self) -> int:
@@ -178,7 +261,10 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
                    mesh: Mesh | None = None, axis: str = "model",
                    pack: bool | str = "auto",
                    emulate_shards: int | None = None,
-                   fused: bool = False) -> ShardedDatabase:
+                   fused: bool = False,
+                   precursor: np.ndarray | None = None,
+                   decoy_precursor: np.ndarray | None = None
+                   ) -> ShardedDatabase:
     """Build a :class:`ShardedDatabase` from bipolar (R, D) reference HVs.
 
     decoys: optional (Rd, D) decoy HVs, stored *before* the targets (see
@@ -193,6 +279,12 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
       each shard's (Q, R/n) score matrix — bit-identical results; packed
       banks take the XOR+popcount tile path, unpacked banks the int8-dot
       variant.
+    precursor: optional (R,) per-target precursor masses — enables the OMS
+      routes: each block is stored precursor-sorted (decoys still before
+      targets; blocks sort independently so the decoy-wins-ties order
+      survives) with the permutation kept for index translation.
+    decoy_precursor: per-decoy masses; defaults to ``precursor`` (decoys
+      from ``make_decoys`` reverse the m/z axis but keep the mass).
     The padded bank is device_put row-sharded over ``axis`` when a mesh
     with that axis (size > 1) is supplied; otherwise it stays local.
     """
@@ -205,6 +297,24 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
         num_decoys = int(decoys.shape[0])
         bank = jnp.concatenate([decoys, refs], axis=0)
     num_rows = int(bank.shape[0])
+
+    oms_index = None
+    if precursor is not None:
+        prec = np.asarray(precursor, np.float32).reshape(-1)
+        if prec.shape[0] != int(refs.shape[0]):
+            raise ValueError(
+                f"precursor has {prec.shape[0]} entries for "
+                f"{int(refs.shape[0])} refs")
+        dprec = None
+        if decoys is not None:
+            dprec = prec if decoy_precursor is None else np.asarray(
+                decoy_precursor, np.float32).reshape(-1)
+            if dprec.shape[0] != num_decoys:
+                raise ValueError(
+                    f"decoy_precursor has {dprec.shape[0]} entries for "
+                    f"{num_decoys} decoys")
+        oms_index = build_precursor_index(prec, dprec)
+        bank = bank[jnp.asarray(oms_index.perm)]
 
     if pack == "auto":
         packed = dim % 32 == 0
@@ -220,6 +330,11 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
         raise ValueError("emulate_shards requires no (or size-1) mesh axis")
     n = mesh_n if mesh_n > 1 else emu
     shard_rows = -(-num_rows // n)  # ceil
+    if oms_index is not None and n > 1:
+        # tile-align shard bases: every shard's clipped band then spans at
+        # most as many kernel tiles as the global band does, so one static
+        # host-side tile budget covers all shards
+        shard_rows = -(-shard_rows // _OMS_ALIGN) * _OMS_ALIGN
     pad_rows = n * shard_rows - num_rows
     if pad_rows:
         store = jnp.pad(store, ((0, pad_rows), (0, 0)))
@@ -229,7 +344,7 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
                            dim=dim, shard_rows=shard_rows, packed=packed,
                            mesh=mesh if mesh_n > 1 else None, axis=axis,
                            emulated_shards=emu if mesh_n == 1 else 1,
-                           fused=bool(fused))
+                           fused=bool(fused), oms=oms_index)
 
 
 @functools.lru_cache(maxsize=None)
@@ -258,6 +373,30 @@ def _sharded_search_fn(mesh: Mesh, axis: str, shard_rows: int, num_rows: int,
         out_specs=(q_spec, q_spec), check_rep=False))
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_oms_fn(mesh: Mesh, axis: str, shard_rows: int, num_rows: int,
+                    dim: int, packed: bool, k: int, batch_sharded: bool,
+                    fused: bool, num_bands: int, num_tiles: int):
+    """Compile the shard_map OMS search for one (geometry, k, batch, tile
+    budget) signature. ``num_tiles`` is bucketed host-side (power of two)
+    so repeated batches with similar window spans share a compile."""
+    q_spec = P("data", None) if batch_sharded else P(None, None)
+    band_spec = P(None, "data") if batch_sharded else P(None, None)
+
+    def body(q, starts, ends, refs_local):
+        base = jax.lax.axis_index(axis).astype(jnp.int32) * shard_rows
+        vals, gidx = _local_oms(q, refs_local, base, k, num_rows, dim,
+                                packed, fused, starts, ends, num_tiles)
+        vals_all = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
+        idx_all = jax.lax.all_gather(gidx, axis, axis=1, tiled=True)
+        return _merge_topk(vals_all, idx_all, k)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, band_spec, band_spec, P(axis, None)),
+        out_specs=(q_spec, q_spec), check_rep=False))
+
+
 def encode_queries(db: ShardedDatabase, queries: jax.Array) -> jax.Array:
     """Encode (Q, D) bipolar queries into the bank's storage form.
 
@@ -269,17 +408,21 @@ def encode_queries(db: ShardedDatabase, queries: jax.Array) -> jax.Array:
     return bitpack_bipolar(queries) if db.packed else queries.astype(jnp.int8)
 
 
-def search_database_encoded(db: ShardedDatabase, q_enc: jax.Array, k: int
-                            ) -> tuple[jax.Array, jax.Array]:
-    """Top-k search over *already encoded* queries (see
-    :func:`encode_queries`) — the serving hot path, where encodes come
-    out of the query-HV cache."""
+def _check_k(db: ShardedDatabase, k: int) -> None:
     if k > db.num_rows:
         raise ValueError(f"k={k} > bank rows {db.num_rows}")
     if k > db.shard_rows:
         raise ValueError(
             f"k={k} exceeds shard_rows={db.shard_rows}; use fewer shards or "
             f"a smaller k (local top-k needs k candidates per shard)")
+
+
+def search_database_encoded(db: ShardedDatabase, q_enc: jax.Array, k: int
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Top-k search over *already encoded* queries (see
+    :func:`encode_queries`) — the serving hot path, where encodes come
+    out of the query-HV cache."""
+    _check_k(db, k)
 
     if db.mesh is None:
         if db.emulated_shards > 1:
@@ -322,6 +465,104 @@ def search_database(db: ShardedDatabase, queries: jax.Array, k: int
     bit-identical to ``topk_search(queries, bank)`` on one device.
     """
     return search_database_encoded(db, encode_queries(db, queries), k)
+
+
+# --------------------------------------------------------------------------
+# open-modification search (OMS) routes
+# --------------------------------------------------------------------------
+
+def oms_plan(db: ShardedDatabase, query_prec: np.ndarray,
+             cfg: OMSConfig | None = None) -> OMSPlan:
+    """Host-side candidate plan for one query batch against an OMS bank:
+    per-query per-block ``[start, len)`` ranges in the sorted layout, plus
+    the static tile budget the banded kernel needs."""
+    if db.oms is None:
+        raise ValueError("bank was built without precursor=; OMS search "
+                         "needs shard_database(..., precursor=...)")
+    return plan_candidates(db.oms, np.asarray(query_prec),
+                           cfg or OMSConfig(),
+                           num_rows_padded=db.num_shards * db.shard_rows,
+                           block_q=_OMS_BLOCK_Q)
+
+
+def oms_search_encoded(db: ShardedDatabase, q_enc: jax.Array, plan: OMSPlan,
+                       k: int) -> tuple[jax.Array, jax.Array]:
+    """OMS top-k over already-encoded queries: every query scores only the
+    bank rows inside its precursor window.
+
+    Bit-identical — tie order and overflow slots included — to sentinel-
+    masking the full score matrix over the sorted bank outside the plan's
+    bands, running ``lax.top_k``, and translating the winners through
+    ``db.oms.perm``: the per-shard/banded decomposition preserves the
+    ascending-global-index tie-break exactly like the exact-search routes,
+    and sentinel overflow slots (window narrower than k) are rewritten to
+    the oracle's ascending masked rows before translation. Returned
+    indices are *original* bank rows (decoys still ``< db.num_decoys``).
+    """
+    if db.oms is None:
+        raise ValueError("bank was built without precursor=")
+    _check_k(db, k)
+    starts = jnp.asarray(plan.starts, jnp.int32)     # (B, Q)
+    ends = starts + jnp.asarray(plan.lens, jnp.int32)
+    nt = int(plan.num_tiles)
+
+    if db.mesh is None:
+        if db.emulated_shards > 1:
+            vals_blocks, idx_blocks = [], []
+            for s in range(db.emulated_shards):
+                r_local = db.data[s * db.shard_rows:(s + 1) * db.shard_rows]
+                vals, gidx = _local_oms(
+                    q_enc, r_local, s * db.shard_rows, k, db.num_rows,
+                    db.dim, db.packed, db.fused, starts, ends, nt)
+                vals_blocks.append(vals)
+                idx_blocks.append(gidx)
+            idx, vals = _merge_topk(jnp.concatenate(vals_blocks, axis=1),
+                                    jnp.concatenate(idx_blocks, axis=1), k)
+        else:
+            vals, idx = _local_oms(q_enc, db.data, 0, k, db.num_rows,
+                                   db.dim, db.packed, db.fused, starts, ends,
+                                   nt)
+    else:
+        data_n = db.mesh.shape.get("data", 1)
+        batch_sharded = data_n > 1 and q_enc.shape[0] % data_n == 0
+        fn = _sharded_oms_fn(db.mesh, db.axis, db.shard_rows, db.num_rows,
+                             db.dim, db.packed, k, batch_sharded, db.fused,
+                             int(starts.shape[0]), nt)
+        idx, vals = fn(q_enc, starts, ends, db.data)
+
+    # overflow slots -> the oracle's ascending masked rows, then translate
+    # every (now in-range) sorted row back to its original bank row
+    from repro.kernels.topk_hamming import canonicalize_overflow_slots
+    s_c = jnp.clip(starts, 0, db.num_rows)
+    e_c = jnp.clip(ends, s_c, db.num_rows)
+    idx = canonicalize_overflow_slots(idx, vals, s_c, e_c, db.num_rows)
+    idx = jnp.take(jnp.asarray(db.oms.perm), idx, axis=0)
+    return idx, vals
+
+
+def oms_search(db: ShardedDatabase, queries: jax.Array,
+               query_prec: np.ndarray, k: int,
+               cfg: OMSConfig | None = None
+               ) -> tuple[jax.Array, jax.Array, OMSPlan]:
+    """Open-modification top-k search of (Q, D) bipolar queries.
+
+    Returns (indices, scores, plan) — indices over original bank rows;
+    the plan carries candidate/scanned fractions for accounting.
+    """
+    plan = oms_plan(db, query_prec, cfg)
+    idx, vals = oms_search_encoded(db, encode_queries(db, queries), plan, k)
+    return idx, vals, plan
+
+
+def oms_search_with_fdr(db: ShardedDatabase, queries: jax.Array,
+                        query_prec: np.ndarray, k: int, fdr: float = 0.01,
+                        cfg: OMSConfig | None = None) -> "FDRSearchResult":
+    """OMS search + target-decoy FDR in one call. Queries whose window is
+    empty are excluded from the FDR estimate (never counted as decoy
+    wins) and rejected."""
+    idx, vals, plan = oms_search(db, queries, query_prec, k, cfg)
+    return fdr_route(db, idx, vals, fdr=fdr,
+                     valid=jnp.asarray(plan.has_candidate))
 
 
 def sharded_topk_search(queries: jax.Array, refs: jax.Array, k: int, *,
@@ -367,13 +608,15 @@ class FDRSearchResult:
 
     indices: np.ndarray   # (Q, k) global bank rows
     scores: np.ndarray    # (Q, k)
-    is_target: np.ndarray  # (Q,) rank-0 candidate is a target
+    is_target: np.ndarray  # (Q,) rank-0 candidate is a target (and valid)
     accept: np.ndarray    # (Q,) passed FDR
     match: np.ndarray     # (Q,) accepted target row or -1
+    valid: np.ndarray | None = None  # (Q,) had >= 1 candidate (OMS batches)
 
 
 def fdr_route(db: ShardedDatabase, indices: jax.Array, scores: jax.Array,
-              fdr: float = 0.01) -> FDRSearchResult:
+              fdr: float = 0.01, valid: jax.Array | None = None
+              ) -> FDRSearchResult:
     """Target-decoy competition + FDR filter over merged top-k results.
 
     Only rank 0 decides the competition: because decoys precede targets in
@@ -382,16 +625,25 @@ def fdr_route(db: ShardedDatabase, indices: jax.Array, scores: jax.Array,
     estimate is computed over the queries in this batch (the serving
     analogue of per-run filtering; callers wanting run-level FDR can
     re-filter accumulated (score, is_target) pairs).
+
+    valid: (Q,) bool for OMS batches — False marks queries with an empty
+    candidate window; they are excluded from the target/decoy counts
+    (mirroring ``run_db_search``: an unmatchable query is not a decoy
+    win), never accepted, and reported with ``is_target=False``.
     """
     top_idx = indices[:, 0]
     top_val = scores[:, 0]
     is_target = top_idx >= db.num_decoys
-    accept = fdr_filter(top_val.astype(jnp.float32), is_target, fdr=fdr)
+    accept = fdr_filter(top_val.astype(jnp.float32), is_target, fdr=fdr,
+                        valid=valid)
+    if valid is not None:
+        is_target = is_target & valid
     match = jnp.where(accept & is_target, top_idx - db.num_decoys, -1)
     return FDRSearchResult(
         indices=np.asarray(indices), scores=np.asarray(scores),
         is_target=np.asarray(is_target), accept=np.asarray(accept),
-        match=np.asarray(match))
+        match=np.asarray(match),
+        valid=None if valid is None else np.asarray(valid))
 
 
 def search_with_fdr(db: ShardedDatabase, queries: jax.Array, k: int,
@@ -445,6 +697,7 @@ class QueryResult:
     is_target: bool
     accept: bool
     match: int           # accepted target-library row or -1
+    has_candidate: bool = True  # precursor window non-empty (OMS mode)
 
 
 class DBSearchServer:
@@ -478,7 +731,8 @@ class DBSearchServer:
                  clock: Callable[[], float] = time.monotonic,
                  cache_bytes: int | None = 64 << 20,
                  buckets: int | Sequence[int] | None = None,
-                 fairness_cap: int | None = None):
+                 fairness_cap: int | None = None,
+                 oms: OMSConfig | None = None):
         if isinstance(db, BankRegistry):
             self.db = None
             self.banks = db
@@ -506,15 +760,24 @@ class DBSearchServer:
         self._tenant_cache: dict[str, list[int]] = {}  # tenant -> [hits, misses]
         self._bucket_counts: collections.Counter[int] = collections.Counter()
         self._clock = clock
+        self.oms = oms
+        self._oms_batches = 0
+        self._oms_cand_frac = 0.0
+        self._oms_scan_frac = 0.0
+        self._oms_no_candidate = 0
 
-    def submit(self, query_hv, tenant: str = "default") -> int:
+    def submit(self, query_hv, tenant: str = "default",
+               precursor: float | None = None) -> int:
         """Enqueue one encoded query HV (D,) for ``tenant`` (which must be
-        registered); returns the request id."""
+        registered); returns the request id. OMS-mode servers require the
+        query's precursor mass."""
         q = np.asarray(query_hv, dtype=np.int8)
         dim = self.banks.dim(tenant)  # KeyError for unknown tenants
         if q.shape != (dim,):
             raise ValueError(f"query shape {q.shape} != ({dim},)")
-        return self.queue.submit(q, tenant=tenant)
+        if self.oms is not None and precursor is None:
+            raise ValueError("OMS serving mode requires precursor= on submit")
+        return self.queue.submit(q, tenant=tenant, precursor=precursor)
 
     def _encode_batch(self, reqs: list[Request], db: ShardedDatabase,
                       bucket: int, tenant: str) -> np.ndarray:
@@ -565,18 +828,53 @@ class DBSearchServer:
         bucket = bucket_for(n, self.buckets)
         self._bucket_counts[bucket] += 1
         batch = self._encode_batch(reqs, db, bucket, tenant)
-        idx, vals = search_database_encoded(db, jnp.asarray(batch), self.k)
-        routed = fdr_route(db, idx[:n], vals[:n], fdr=self.fdr)
+        if self.oms is not None:
+            routed = self._oms_step(reqs, db, batch, n, bucket)
+        else:
+            idx, vals = search_database_encoded(db, jnp.asarray(batch), self.k)
+            routed = fdr_route(db, idx[:n], vals[:n], fdr=self.fdr)
         t_done = self._clock()
         for i, r in enumerate(reqs):
             r.result = QueryResult(
                 indices=routed.indices[i], scores=routed.scores[i],
                 is_target=bool(routed.is_target[i]),
-                accept=bool(routed.accept[i]), match=int(routed.match[i]))
+                accept=bool(routed.accept[i]), match=int(routed.match[i]),
+                has_candidate=(True if routed.valid is None
+                               else bool(routed.valid[i])))
             r.t_done = t_done
         self.stats.record_batch(reqs)
         self.tenant_stats.setdefault(tenant, LatencyStats()).record_batch(reqs)
         return reqs
+
+    def _oms_step(self, reqs: list[Request], db: ShardedDatabase,
+                  batch: np.ndarray, n: int, bucket: int) -> FDRSearchResult:
+        """OMS search for one flushed batch.
+
+        The real rows are sorted by precursor before the search (queries
+        with nearby masses share kernel tiles, so the per-Q-block tile
+        span — and with it the static tile budget — stays small) and the
+        results unsorted afterwards; FDR routing is order-independent, so
+        it runs on the unsorted batch. Pad rows inherit the highest real
+        precursor for the same reason and are sliced off before routing.
+        """
+        prec = np.asarray([r.precursor for r in reqs], np.float32)
+        order = np.argsort(prec, kind="stable")
+        inv = np.argsort(order, kind="stable")
+        prec_padded = np.concatenate(
+            [prec[order], np.full(bucket - n, prec[order][-1], np.float32)])
+        plan = oms_plan(db, prec_padded, self.oms)
+        batch_sorted = np.concatenate([batch[:n][order], batch[n:]], axis=0)
+        idx, vals = oms_search_encoded(db, jnp.asarray(batch_sorted), plan,
+                                       self.k)
+        idx = np.asarray(idx)[:n][inv]
+        vals = np.asarray(vals)[:n][inv]
+        valid = plan.has_candidate[:n][inv]
+        self._oms_batches += 1
+        self._oms_cand_frac += plan.candidate_fraction
+        self._oms_scan_frac += plan.scanned_fraction
+        self._oms_no_candidate += int((~valid).sum())
+        return fdr_route(db, jnp.asarray(idx), jnp.asarray(vals),
+                         fdr=self.fdr, valid=jnp.asarray(valid))
 
     def run_until_drained(self) -> list[Request]:
         """Flush until the queue is empty; returns all completed requests."""
@@ -603,4 +901,17 @@ class DBSearchServer:
                             if self.query_cache else None)
         s["buckets"] = {int(b): int(c)
                         for b, c in sorted(self._bucket_counts.items())}
+        if self.oms is not None:
+            nb = max(self._oms_batches, 1)
+            s["oms"] = {
+                "tol": self.oms.tol,
+                "open_tol": self.oms.open_tol,
+                "open_search": self.oms.open_search,
+                "batches": self._oms_batches,
+                "candidate_fraction": self._oms_cand_frac / nb,
+                "scanned_fraction": self._oms_scan_frac / nb,
+                "no_candidate": self._oms_no_candidate,
+            }
+        else:
+            s["oms"] = None
         return s

@@ -52,6 +52,7 @@ class Request:
     tenant: str = "default"
     t_done: float | None = None
     result: Any = None
+    precursor: float | None = None  # query precursor mass (OMS serving mode)
 
     @property
     def latency_s(self) -> float:
@@ -93,10 +94,11 @@ class MicroBatchQueue:
         """Tenants with at least one pending request (insertion order)."""
         return list(self._pending)
 
-    def submit(self, query, tenant: str = "default") -> int:
+    def submit(self, query, tenant: str = "default",
+               precursor: float | None = None) -> int:
         """Enqueue one query; returns its request id (FIFO-ordered)."""
         req = Request(rid=self._next_rid, query=query, tenant=tenant,
-                      t_submit=self._clock())
+                      t_submit=self._clock(), precursor=precursor)
         self._next_rid += 1
         self._pending.setdefault(tenant, collections.deque()).append(req)
         return req.rid

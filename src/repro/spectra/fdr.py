@@ -23,23 +23,33 @@ def decoy_competition(scores_target: jax.Array, scores_decoy: jax.Array
     return scores_target > scores_decoy, jnp.maximum(scores_target, scores_decoy)
 
 
-def fdr_filter(best_scores: jax.Array, is_target: jax.Array, fdr: float = 0.01
-               ) -> jax.Array:
+def fdr_filter(best_scores: jax.Array, is_target: jax.Array, fdr: float = 0.01,
+               valid: jax.Array | None = None) -> jax.Array:
     """Accept mask at the given FDR.
 
     best_scores: (Q,) best match score per query.
     is_target:   (Q,) True if the best match was a target (not decoy).
+    valid:       (Q,) optional bool; False entries (queries with no candidate
+                 in their precursor window) are excluded from the target/decoy
+                 counts entirely — a query that matched *nothing* is not a
+                 decoy win, and counting it as one depresses acceptance for
+                 every other query in the batch. Invalid queries are never
+                 accepted.
     Finds the lowest score threshold whose running FDR estimate
     (decoys/targets above threshold) stays <= fdr, vectorized.
     """
     order = jnp.argsort(-best_scores)
     tgt_sorted = is_target[order]
-    n_tgt = jnp.cumsum(tgt_sorted.astype(jnp.int32))
-    n_dec = jnp.cumsum((~tgt_sorted).astype(jnp.int32))
+    if valid is None:
+        valid_sorted = jnp.ones_like(tgt_sorted, dtype=bool)
+    else:
+        valid_sorted = valid[order]
+    n_tgt = jnp.cumsum((tgt_sorted & valid_sorted).astype(jnp.int32))
+    n_dec = jnp.cumsum((~tgt_sorted & valid_sorted).astype(jnp.int32))
     running_fdr = n_dec / jnp.maximum(n_tgt, 1)
     ok = running_fdr <= fdr
     # largest prefix with FDR under control
     k = jnp.max(jnp.where(ok, jnp.arange(ok.shape[0]) + 1, 0))
-    accept_sorted = (jnp.arange(ok.shape[0]) < k) & tgt_sorted
+    accept_sorted = (jnp.arange(ok.shape[0]) < k) & tgt_sorted & valid_sorted
     accept = jnp.zeros_like(accept_sorted).at[order].set(accept_sorted)
     return accept

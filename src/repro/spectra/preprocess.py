@@ -46,6 +46,8 @@ def bucket_by_precursor(precursor: np.ndarray, bucket_width: float = 40.0
     index arrays sorted by bucket mass.
     """
     prec = np.asarray(precursor)
+    if prec.size == 0:
+        return []
     lo = float(prec.min())
     bucket_ids = ((prec - lo) / bucket_width).astype(np.int64)
     out = []
@@ -59,10 +61,13 @@ def candidate_window_mask(query_prec: jax.Array, ref_prec: jax.Array,
                           open_tol: float = 200.0) -> jax.Array:
     """(Q, R) bool mask of references within the precursor tolerance window.
 
-    Open-modification search widens the window to +open_tol (mass additions),
-    which is what makes HEK293-style searches expensive — and is the
-    candidate_fraction knob of the energy model."""
+    Open-modification search widens the window to +open_tol on the *query*
+    side (mass additions: a modified query is heavier than its unmodified
+    reference), i.e. ``query - ref`` must fall in the open interval
+    ``(-tol, open_tol)``. This asymmetry is what makes HEK293-style searches
+    expensive — and is the candidate_fraction knob of the energy model."""
     d = ref_prec[None, :] - query_prec[:, None]
     if open_search:
-        return (d > -tol) & (d < open_tol)
+        # d = ref - query in (-open_tol, tol)  <=>  query - ref in (-tol, open_tol)
+        return (d > -open_tol) & (d < tol)
     return jnp.abs(d) < tol

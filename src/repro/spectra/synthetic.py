@@ -40,6 +40,11 @@ class SyntheticMSConfig:
     mz_shift_bins: int = 0
     noise_peaks: int = 12             # chemical noise peaks per spectrum
     modification_rate: float = 0.0    # fraction of spectra with a mass shift
+    # precursor-mass shift range for modified spectra (opt-in; (0, 0) keeps
+    # the precursor at the unmodified identity's mass). A modification makes
+    # the observed peptide *heavier*, which is what open-modification search
+    # widens the window for — set e.g. (60.0, 90.0) to exercise OMS.
+    modification_mass_range: tuple[float, float] = (0.0, 0.0)
     precursor_range: tuple[float, float] = (400.0, 1600.0)
     seed: int = 0            # instance noise (jitter/dropout/noise peaks)
     template_seed: int = 42  # peptide templates — fixed across query/ref sets
@@ -121,6 +126,17 @@ def generate_dataset(cfg: SyntheticMSConfig) -> MSDataset:
     ids = jnp.arange(cfg.num_identities, dtype=jnp.float32)
     prec_id = (lo + (hi - lo) * ((ids * phi) % 1.0)).astype(jnp.float32)
     precursor = prec_id[identity] + 0.02 * jax.random.normal(k_p, (n,))
+
+    # opt-in: modified spectra get a heavier precursor (the OMS scenario);
+    # keyed by fold_in so enabling it leaves every other random stream —
+    # and therefore all default-config outputs — bit-identical
+    m_lo, m_hi = cfg.modification_mass_range
+    if m_hi > m_lo:
+        shift = jax.random.uniform(jax.random.fold_in(key, 97), (n,),
+                                   minval=m_lo, maxval=m_hi)
+        precursor = jnp.where(is_mod, precursor + shift, precursor)
+    elif m_lo == m_hi and m_hi > 0.0:
+        precursor = jnp.where(is_mod, precursor + m_hi, precursor)
 
     # normalize to [0, 1] per spectrum
     mx = jnp.maximum(spec.max(axis=1, keepdims=True), 1e-6)

@@ -86,6 +86,29 @@ class TestDBSearchPipeline:
         small, large = mk(96), mk(2049)
         assert large.recall >= small.recall
 
+    def test_no_candidate_queries_do_not_poison_fdr(self, ds, refs, ref_prec):
+        """Queries whose precursor window is empty are excluded from the
+        FDR estimate (not counted as decoy wins), rejected with match=-1,
+        and reported via num_no_candidate — while staying in the recall
+        denominator."""
+        cfg = SpecPCMConfig(hd_dim=1026, mlc_bits=3, num_levels=16)
+        q = generate_query_set(ds, SyntheticMSConfig(
+            num_identities=24, spectra_per_identity=8, num_bins=1024), 48)
+        prec = np.asarray(q.precursor).copy()
+        prec[:5] = 1e6  # far outside every reference window
+        rep = run_db_search(q.spectra, jnp.asarray(prec), refs, ref_prec, cfg,
+                            query_identity=q.identity,
+                            ref_identity=jnp.arange(24))
+        base = run_db_search(q.spectra, q.precursor, refs, ref_prec, cfg,
+                             query_identity=q.identity,
+                             ref_identity=jnp.arange(24))
+        assert rep.num_no_candidate == 5
+        assert (rep.matches[:5] == -1).all() and not rep.accepted[:5].any()
+        # the other queries still identify: the 5 phantom "decoy wins" no
+        # longer drag the whole batch's acceptance down
+        assert rep.num_identified >= base.num_identified - 5
+        assert rep.num_identified > 0.5 * (48 - 5)
+
 
 class TestFDR:
     def test_fdr_filter_controls_rate(self):
@@ -108,6 +131,33 @@ class TestFDR:
         s = jnp.asarray(np.random.default_rng(1).uniform(0, 1, (3, 8)))
         d = make_decoys(s)
         np.testing.assert_array_equal(np.asarray(d), np.asarray(s)[:, ::-1])
+
+    def test_fdr_filter_excludes_invalid_queries(self):
+        """Queries with an empty candidate window (valid=False) must not
+        count as decoy wins: a handful of them used to depress acceptance
+        for the whole batch."""
+        scores = jnp.asarray([9.0, 8.0, 7.0, 6.0, 5.0])
+        is_target = jnp.asarray([True, True, True, True, True])
+        # three no-candidate queries whose best_t == best_d "tie" shows up
+        # as is_target=False at a high score
+        bad = jnp.asarray([10.0, 9.5, 9.2])
+        all_scores = jnp.concatenate([bad, scores])
+        all_tgt = jnp.concatenate([jnp.zeros(3, bool), is_target])
+        valid = jnp.concatenate([jnp.zeros(3, bool), jnp.ones(5, bool)])
+        without = np.asarray(fdr_filter(all_scores, all_tgt, fdr=0.05))
+        with_valid = np.asarray(fdr_filter(all_scores, all_tgt, fdr=0.05,
+                                           valid=valid))
+        assert not without.any()        # phantom decoys poison the estimate
+        assert with_valid[3:].all()     # excluded, every real target passes
+        assert not with_valid[:3].any()  # invalid queries are never accepted
+
+    def test_fdr_filter_valid_all_true_is_noop(self):
+        rng = np.random.default_rng(5)
+        scores = jnp.asarray(rng.normal(0, 3, 64))
+        tgt = jnp.asarray(rng.uniform(size=64) < 0.6)
+        a = fdr_filter(scores, tgt, fdr=0.1)
+        b = fdr_filter(scores, tgt, fdr=0.1, valid=jnp.ones(64, bool))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 class TestPreprocess:
@@ -135,7 +185,14 @@ class TestPreprocess:
         assert b_of[0] == b_of[1] and b_of[2] == b_of[3]
         assert b_of[0] != b_of[4]
 
+    def test_bucketing_empty_input(self):
+        assert bucket_by_precursor(np.asarray([], np.float32), 50.0) == []
+
     def test_candidate_window_open_search(self):
+        """An open-search window admits references *lighter* than the query
+        (query - ref in (-tol, open_tol)): a modification adds mass to the
+        query, so its unmodified reference sits open_tol below it — never
+        open_tol above."""
         qp = jnp.asarray([500.0])
         rp = jnp.asarray([480.0, 495.0, 510.0, 690.0, 710.0])
         open_m = np.asarray(candidate_window_mask(qp, rp, tol=20.,
@@ -143,5 +200,25 @@ class TestPreprocess:
                                                   open_tol=200.))
         closed_m = np.asarray(candidate_window_mask(qp, rp, tol=20.,
                                                     open_search=False))
-        np.testing.assert_array_equal(open_m[0], [False, True, True, True, False])
+        np.testing.assert_array_equal(open_m[0], [True, True, True, False, False])
         np.testing.assert_array_equal(closed_m[0], [False, True, True, False, False])
+
+    def test_candidate_window_phospho_offset(self):
+        """Directed regression for the mirrored-window bug: a query carrying
+        a phosphorylation (+79.97 Da) must still see its unmodified
+        reference; a reference 79.97 Da *heavier* than the query must not
+        enter the window (no modification removes that much mass here)."""
+        ref = 500.0
+        phospho = 79.97
+        qp = jnp.asarray([ref + phospho,   # modified query, unmodified ref
+                          ref - phospho])  # query lighter than ref
+        rp = jnp.asarray([ref])
+        m = np.asarray(candidate_window_mask(qp, rp, tol=20.,
+                                             open_search=True, open_tol=200.))
+        assert m[0, 0]          # the whole point of open search
+        assert not m[1, 0]      # the mirrored direction stays closed
+        # a shift beyond the modification-mass budget is out of the window
+        far = np.asarray(candidate_window_mask(
+            jnp.asarray([ref + 250.0]), rp, tol=20., open_search=True,
+            open_tol=200.))
+        assert not far[0, 0]

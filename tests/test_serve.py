@@ -8,6 +8,7 @@ import sys
 import textwrap
 from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -16,12 +17,18 @@ from repro.core.hd.similarity import bitpack_bipolar, topk_search, topk_search_p
 from repro.serve import (
     DBSearchServer,
     MicroBatchQueue,
+    OMSConfig,
+    oms_plan,
+    oms_search,
+    oms_search_with_fdr,
     search_database,
     search_with_fdr,
     shard_database,
     sharded_topk_search,
 )
 from repro.serve.queue import LatencyStats, Request
+
+_SENTINEL = np.iinfo(np.int32).min
 
 REPO = Path(__file__).resolve().parent.parent
 
@@ -141,6 +148,160 @@ def test_fdr_route_tie_resolves_to_decoy():
     res = search_with_fdr(db, row, k=3, fdr=1.0)
     assert not res.is_target[0]
     assert res.match[0] == -1
+
+
+# --------------------------------------------------------------------------
+# open-modification search: banded/sharded routes vs the masked oracle
+# --------------------------------------------------------------------------
+
+def _oms_oracle(db, q, sorted_bank, plan, k):
+    """Sentinel-mask the full score matrix over the *sorted* bank outside
+    the plan's bands, run lax.top_k, translate winners through the
+    permutation — the definition oms_search_encoded must match bit-exactly,
+    tie order and overflow slots included."""
+    scores = q.astype(jnp.int32) @ sorted_bank.T.astype(jnp.int32)
+    col = jnp.arange(sorted_bank.shape[0], dtype=jnp.int32)[None, :]
+    band = jnp.zeros(scores.shape, bool)
+    starts = jnp.asarray(plan.starts)
+    ends = starts + jnp.asarray(plan.lens)
+    for b in range(starts.shape[0]):
+        band = band | ((col >= starts[b][:, None]) & (col < ends[b][:, None]))
+    scores = jnp.where(band, scores, _SENTINEL)
+    vals, idx = jax.lax.top_k(scores, k)
+    return jnp.take(jnp.asarray(db.oms.perm), idx, axis=0), vals
+
+
+def _oms_fixture(rng, *, num_refs=150, dim=64, num_queries=23):
+    refs = _bipolar(rng, (num_refs, dim))
+    decoys = _bipolar(rng, (num_refs, dim))
+    prec = rng.uniform(400, 1600, num_refs).astype(np.float32)
+    qprec = rng.uniform(420, 1650, num_queries).astype(np.float32)
+    queries = _bipolar(rng, (num_queries, dim))
+    return refs, decoys, prec, queries, qprec
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4, 8])
+@pytest.mark.parametrize("fused", [False, True])
+def test_oms_search_bit_identical_to_masked_oracle(num_shards, fused):
+    """Every OMS route (banded kernel or masked unfused, any emulated shard
+    count, packed or int8 banks) must equal sentinel-masking the full score
+    matrix over the sorted bank and translating through the permutation."""
+    rng = np.random.default_rng(num_shards * 10 + fused)
+    refs, decoys, prec, queries, qprec = _oms_fixture(rng)
+    cfg = OMSConfig(tol=15.0, open_tol=150.0)
+    k = 7
+    for pack in ("auto", False):
+        db = shard_database(refs, decoys=decoys, pack=pack, fused=fused,
+                            emulate_shards=(num_shards if num_shards > 1
+                                            else None),
+                            precursor=prec)
+        plan = oms_plan(db, qprec, cfg)
+        idx, vals, _ = oms_search(db, queries, qprec, k, cfg)
+        sorted_bank = jnp.concatenate([decoys, refs])[jnp.asarray(db.oms.perm)]
+        oi, ov = _oms_oracle(db, queries, sorted_bank, plan, k)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(oi),
+                                      err_msg=str((num_shards, fused, pack)))
+        np.testing.assert_array_equal(np.asarray(vals), np.asarray(ov),
+                                      err_msg=str((num_shards, fused, pack)))
+
+
+def test_oms_fused_equals_unfused_through_fdr():
+    rng = np.random.default_rng(41)
+    refs, decoys, prec, queries, qprec = _oms_fixture(rng, num_refs=90)
+    res = {}
+    for fused in (False, True):
+        db = shard_database(refs, decoys=decoys, emulate_shards=4,
+                            fused=fused, precursor=prec)
+        res[fused] = oms_search_with_fdr(db, queries, qprec, k=4, fdr=0.5)
+    np.testing.assert_array_equal(res[True].indices, res[False].indices)
+    np.testing.assert_array_equal(res[True].scores, res[False].scores)
+    np.testing.assert_array_equal(res[True].accept, res[False].accept)
+    np.testing.assert_array_equal(res[True].match, res[False].match)
+
+
+def test_oms_empty_window_rejected_not_counted_as_decoy():
+    """A query whose precursor window is empty must come back rejected
+    (match -1, valid False) without depressing the FDR acceptance of the
+    rest of the batch."""
+    rng = np.random.default_rng(43)
+    refs = _bipolar(rng, (40, 64))
+    decoys = _bipolar(rng, (40, 64))
+    prec = rng.uniform(400, 1600, 40).astype(np.float32)
+    db = shard_database(refs, decoys=decoys, precursor=prec)
+    queries = jnp.concatenate([refs[:6], _bipolar(rng, (3, 64))])
+    qprec = np.concatenate([prec[:6], np.full(3, 1e6, np.float32)])
+    res = oms_search_with_fdr(db, queries, qprec, k=3, fdr=0.05)
+    assert res.valid is not None
+    np.testing.assert_array_equal(np.asarray(res.valid),
+                                  [True] * 6 + [False] * 3)
+    assert (res.match[6:] == -1).all() and not res.accept[6:].any()
+    assert not res.is_target[6:].any()
+    # exact library rows with a clean window: all six accepted
+    assert res.accept[:6].all()
+
+
+def test_oms_requires_precursor_bank():
+    rng = np.random.default_rng(47)
+    refs = _bipolar(rng, (20, 32))
+    db = shard_database(refs)  # no precursor=
+    with pytest.raises(ValueError, match="precursor"):
+        oms_plan(db, np.asarray([500.0], np.float32))
+
+
+def test_oms_server_matches_direct_search():
+    """One OMS server flush == the direct oms_search_with_fdr call on the
+    same queries: the server's precursor sort/unsort and padding must be
+    invisible in the results."""
+    rng = np.random.default_rng(53)
+    refs, decoys, prec, queries, qprec = _oms_fixture(
+        rng, num_refs=60, num_queries=8)
+    db = shard_database(refs, decoys=decoys, precursor=prec)
+    cfg = OMSConfig(tol=15.0, open_tol=150.0)
+    srv = DBSearchServer(db, k=3, fdr=0.5, max_batch_size=8,
+                         flush_timeout_s=0.0, oms=cfg)
+    for q, p in zip(np.asarray(queries), qprec):
+        srv.submit(q, precursor=float(p))
+    done = srv.run_until_drained()
+    direct = oms_search_with_fdr(db, queries, qprec, k=3, fdr=0.5, cfg=cfg)
+    assert len(done) == 8
+    for i, r in enumerate(done):
+        np.testing.assert_array_equal(r.result.indices, direct.indices[i])
+        np.testing.assert_array_equal(r.result.scores, direct.scores[i])
+        assert r.result.accept == bool(direct.accept[i])
+        assert r.result.match == int(direct.match[i])
+        assert r.result.has_candidate == bool(direct.valid[i])
+    oms_stats = srv.summary()["oms"]
+    assert oms_stats["batches"] == 1
+    assert 0.0 < oms_stats["candidate_fraction"] < 1.0
+
+
+def test_oms_server_ragged_flush_padding_is_invisible():
+    """A ragged OMS flush (n < max_batch_size) pads queries *and*
+    precursors; padded rows must not perturb the real results."""
+    rng = np.random.default_rng(59)
+    refs, decoys, prec, queries, qprec = _oms_fixture(
+        rng, num_refs=60, num_queries=3)
+    db = shard_database(refs, decoys=decoys, precursor=prec)
+    srv = DBSearchServer(db, k=3, fdr=0.5, max_batch_size=8,
+                         flush_timeout_s=0.0, oms=OMSConfig())
+    for q, p in zip(np.asarray(queries), qprec):
+        srv.submit(q, precursor=float(p))
+    done = srv.run_until_drained()
+    direct = oms_search_with_fdr(db, queries, qprec, k=3, fdr=0.5,
+                                 cfg=OMSConfig())
+    for i, r in enumerate(done):
+        np.testing.assert_array_equal(r.result.indices, direct.indices[i])
+        assert r.result.match == int(direct.match[i])
+
+
+def test_oms_server_submit_without_precursor_raises():
+    rng = np.random.default_rng(61)
+    refs = _bipolar(rng, (20, 32))
+    prec = rng.uniform(400, 1600, 20).astype(np.float32)
+    db = shard_database(refs, precursor=prec)
+    srv = DBSearchServer(db, k=2, max_batch_size=4, oms=OMSConfig())
+    with pytest.raises(ValueError, match="precursor"):
+        srv.submit(np.asarray(refs[0]))
 
 
 # --------------------------------------------------------------------------
@@ -309,6 +470,38 @@ def test_sharded_search_bit_identical_on_8_device_mesh():
         print("SHARDED_TOPK_OK")
     """)
     assert "SHARDED_TOPK_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_oms_search_bit_identical_on_8_device_mesh():
+    """Real shard_map OMS routes (scalar bands broadcast via the in_specs,
+    banded kernel per shard) vs the single-device masked path."""
+    r = _run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.serve import OMSConfig, oms_search, shard_database
+        rng = np.random.default_rng(2)
+        R, D, Q, k = 150, 64, 16, 5
+        refs = jnp.asarray(rng.choice([-1, 1], (R, D)).astype(np.int8))
+        decoys = jnp.asarray(rng.choice([-1, 1], (R, D)).astype(np.int8))
+        prec = rng.uniform(400, 1600, R).astype(np.float32)
+        q = jnp.asarray(rng.choice([-1, 1], (Q, D)).astype(np.int8))
+        qprec = np.sort(rng.uniform(420, 1650, Q).astype(np.float32))
+        cfg = OMSConfig(tol=15.0, open_tol=150.0)
+        ref_db = shard_database(refs, decoys=decoys, precursor=prec)
+        oi, ov, _ = oms_search(ref_db, q, qprec, k, cfg)
+        for model_n in (2, 4, 8):
+            mesh = jax.make_mesh((8 // model_n, model_n), ("data", "model"))
+            for pack in (True, False):
+                for fused in (False, True):
+                    db = shard_database(refs, decoys=decoys, mesh=mesh,
+                                        pack=pack, fused=fused,
+                                        precursor=prec)
+                    si, sv, _ = oms_search(db, q, qprec, k, cfg)
+                    assert (np.asarray(si) == np.asarray(oi)).all(), (model_n, pack, fused)
+                    assert (np.asarray(sv) == np.asarray(ov)).all(), (model_n, pack, fused)
+        print("OMS_SHARDED_OK")
+    """)
+    assert "OMS_SHARDED_OK" in r.stdout, r.stdout + r.stderr
 
 
 @pytest.mark.slow
