@@ -86,17 +86,20 @@ def quantize_levels(values: jax.Array, num_levels: int) -> jax.Array:
     return jnp.where(present, lvl, 0)
 
 
-def encode_batch_reference(
-    features: jax.Array,
+def encode_levels_batch(
+    levels: jax.Array,
     id_hvs: jax.Array,
     level_hvs: jax.Array,
 ) -> jax.Array:
-    """Pure-jnp oracle for Eq. 1. features: (B, F) float in [0,1].
+    """Eq. 1 from *already quantized* levels. levels: (B, F) int in [0, m).
 
-    Returns bipolar (B, D) int8 hypervectors.
+    Level 0 is the absent-peak sentinel and contributes nothing; sign ties
+    (acc == 0) resolve to -1. This is the levels-in entry point shared by
+    :func:`encode_batch_reference` and the serving raw-spectrum path
+    (``repro.serve.db_search.search_database_levels``), and the oracle the
+    fused encode->search kernel (``repro.kernels.encode_search``) must
+    match bit-exactly. Returns bipolar (B, D) int8 hypervectors.
     """
-    num_levels = level_hvs.shape[0]
-    levels = quantize_levels(features, num_levels)  # (B, F)
     lv = level_hvs[levels]  # (B, F, D) int8
     present = (levels > 0).astype(jnp.int32)  # level 0 = absent peak
     acc = jnp.einsum(
@@ -109,6 +112,19 @@ def encode_batch_reference(
     # sign with tie -> +1 (paper: sign outputs 1 when input positive else -1;
     # zero maps to -1 there. We match the paper exactly.)
     return jnp.where(acc > 0, jnp.int8(1), jnp.int8(-1))
+
+
+def encode_batch_reference(
+    features: jax.Array,
+    id_hvs: jax.Array,
+    level_hvs: jax.Array,
+) -> jax.Array:
+    """Pure-jnp oracle for Eq. 1. features: (B, F) float in [0,1].
+
+    Returns bipolar (B, D) int8 hypervectors.
+    """
+    levels = quantize_levels(features, level_hvs.shape[0])  # (B, F)
+    return encode_levels_batch(levels, id_hvs, level_hvs)
 
 
 @partial(jax.jit, static_argnames=("block_features",))

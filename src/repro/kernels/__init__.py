@@ -10,10 +10,12 @@ Kernels target TPU (MXU-aligned 128 tiles); on CPU they run with
 """
 
 from repro.kernels.decode_attention.ops import decode_attention_pallas
+from repro.kernels.encode_search.ops import encode_search_pallas
 from repro.kernels.hamming_pop.ops import hamming_pop_pallas
 from repro.kernels.hd_encode.ops import hd_encode_pallas
 from repro.kernels.imc_mvm.ops import imc_mvm_pallas
 from repro.kernels.topk_hamming.ops import topk_hamming_pallas
 
 __all__ = ["imc_mvm_pallas", "hd_encode_pallas", "hamming_pop_pallas",
-           "decode_attention_pallas", "topk_hamming_pallas"]
+           "decode_attention_pallas", "topk_hamming_pallas",
+           "encode_search_pallas"]

@@ -1,0 +1,11 @@
+from repro.kernels.encode_search.ops import (
+    encode_search_banded_pallas,
+    encode_search_pallas,
+)
+from repro.kernels.encode_search.ref import (
+    encode_search_banded_ref,
+    encode_search_ref,
+)
+
+__all__ = ["encode_search_pallas", "encode_search_banded_pallas",
+           "encode_search_ref", "encode_search_banded_ref"]

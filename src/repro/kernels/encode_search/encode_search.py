@@ -1,0 +1,284 @@
+"""Pallas TPU kernel: fused HD encode -> bit-pack -> streaming top-k search.
+
+SpecPCM's end-to-end pipeline keeps a spectrum on-accelerator from
+encoding (Eq. 1) through DB search (§III.C): the encoded hypervector is
+written straight into the near-memory search unit, never round-tripping
+main memory. This kernel is the TPU equivalent for the serving query hot
+path. Per ``(Q-block, R-tile)`` grid step (R innermost):
+
+  * on the **first** R tile of a Q block, the raw quantized spectra
+    (``levels``) are encoded in VMEM with the shared Eq. 1 accumulator
+    (:func:`repro.kernels.hd_encode.hd_encode.encode_acc`), signed, and —
+    for packed banks — bit-packed to uint32 words, all inside the kernel;
+    the encoded block persists in VMEM scratch across the R tiles, so the
+    query hypervector **never reaches HBM** in any form;
+  * every R tile then scores against the resident encoded block with the
+    fused search's tile scorer (XOR+popcount or int8 dot) and folds into
+    the same running VMEM top-k
+    (:func:`repro.kernels.topk_hamming.topk_hamming._select_topk`).
+
+Only the ``(Q, k)`` result is ever written to HBM — the staged path's
+intermediate ``(Q, D)`` encoded batch, its packed ``(Q, W)`` form, *and*
+the ``(Q, R)`` score matrix all stay on-chip.
+
+**Bit-identity.** The encode accumulates +-1 terms in float32 (exact far
+beyond any feature count), signs with the paper's tie -> -1 convention,
+and packs with the ``bitpack_bipolar`` bit order (+1 -> bit 1), so the
+resident encoded block is bit-identical to
+``encode_queries(db, encode_levels_batch(levels, ...))``; the scoring and
+merge are the verbatim ``topk_hamming`` inner loops. Hence the whole
+fusion matches the staged oracle bit-for-bit, tie order and sentinel
+masking included. Padding is inert by construction: padded feature
+columns carry level 0 (absent) with zero ID rows, padded HD dims
+accumulate to 0 -> sign -1 -> packed bit 0, and padded reference
+words/columns are zero, so cross terms vanish (see ops.py).
+
+The banded variant mirrors ``_topk_banded_kernel``: a scalar-prefetched
+per-Q-block tile base steers the R BlockSpec so only the tiles covering
+each query's OMS precursor window are fetched, with per-query
+``[start, end)`` bounds masking in-tile rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.hd_encode.hd_encode import encode_acc
+from repro.kernels.topk_hamming.topk_hamming import (
+    _SENTINEL,
+    _select_topk,
+    _tile_scores,
+)
+
+
+def _encode_block(levels_ref, id_ref, lv_ref, *, num_features: int,
+                  num_levels: int, block_f: int, packed: bool) -> jax.Array:
+    """Encode one Q block in VMEM: (bq, W) packed uint32 or (bq, D) int8.
+
+    Shares the Eq. 1 accumulator with the standalone encode kernel, then
+    signs (tie -> -1) and, for packed banks, bit-packs with the
+    ``bitpack_bipolar`` convention (+1 -> bit 1, word w holds dims
+    [32w, 32w+32) with dim 32w at bit 0).
+    """
+    acc = encode_acc(levels_ref, id_ref, lv_ref, num_features=num_features,
+                     num_levels=num_levels, block_f=block_f)
+    if not packed:
+        return jnp.where(acc > 0, jnp.int8(1), jnp.int8(-1))
+    bq, d = acc.shape
+    bits = (acc > 0).astype(jnp.uint32).reshape(bq, d // 32, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _encode_search_kernel(nv_ref, levels_ref, id_ref, lv_ref, r_ref,
+                          ovals_ref, oidx_ref, qenc_ref, svals_ref, sidx_ref,
+                          *, dim: int, k: int, block_r: int, word_chunk: int,
+                          packed: bool, r_padded: int, num_features: int,
+                          num_levels: int, block_f: int):
+    j = pl.program_id(1)
+    bq = levels_ref.shape[0]
+    br = r_ref.shape[0]
+
+    # first R step of this Q block: encode (+ pack) the raw spectra into
+    # scratch and reset the running top-k — the encoded block then stays
+    # resident in VMEM for every R tile of this Q block.
+    @pl.when(j == 0)
+    def _():
+        qenc_ref[...] = _encode_block(
+            levels_ref, id_ref, lv_ref, num_features=num_features,
+            num_levels=num_levels, block_f=block_f, packed=packed)
+        svals_ref[...] = jnp.full((bq, k), _SENTINEL, jnp.int32)
+        sidx_ref[...] = r_padded + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, k), 1)
+
+    scores = _tile_scores(qenc_ref, r_ref, dim=dim, word_chunk=word_chunk,
+                          packed=packed)
+
+    col = j * block_r + jax.lax.broadcasted_iota(jnp.int32, (bq, br), 1)
+    scores = jnp.where(col < nv_ref[0], scores, _SENTINEL)
+    svals, sidx = _select_topk(
+        jnp.concatenate([svals_ref[...], scores], axis=1),
+        jnp.concatenate([sidx_ref[...], col], axis=1), k)
+    svals_ref[...] = svals
+    sidx_ref[...] = sidx
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        ovals_ref[...] = svals
+        oidx_ref[...] = sidx
+
+
+def encode_search_pallas_call(
+    levels: jax.Array,     # (Q, F) int32 quantized intensity levels
+    id_hvs: jax.Array,     # (F, D) int8 bipolar (D padded to the ref width)
+    level_hvs: jax.Array,  # (m, D) int8 bipolar
+    r: jax.Array,          # (R, W) uint32 packed, or (R, D) int8
+    num_valid: jax.Array,  # (1,) int32: rows >= num_valid mask to SENTINEL
+    *,
+    dim: int,
+    k: int,
+    block_q: int = 8,
+    block_r: int = 128,
+    block_f: int = 128,
+    word_chunk: int = 32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (vals (Q, k), idx (Q, k)): fused encode -> pack -> top-k.
+
+    ``dim`` is the *true* HD dimensionality used on the score scale;
+    ``id_hvs``/``level_hvs`` columns and ``r`` words/columns may be
+    zero-padded past it (inert, see module docstring).
+    """
+    Q, F = levels.shape
+    m, D = level_hvs.shape
+    R, W = r.shape
+    packed = r.dtype == jnp.uint32
+    assert Q % block_q == 0 and R % block_r == 0 and F % block_f == 0
+    assert (D == 32 * W) if packed else (D == W)
+    assert not packed or W % word_chunk == 0
+
+    kernel = functools.partial(
+        _encode_search_kernel, dim=dim, k=k, block_r=block_r,
+        word_chunk=word_chunk, packed=packed, r_padded=R, num_features=F,
+        num_levels=m, block_f=block_f)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // block_q, R // block_r),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_q, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((F, D), lambda i, j: (0, 0)),
+            pl.BlockSpec((m, D), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_r, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, W), jnp.uint32 if packed else jnp.int8),
+            pltpu.VMEM((block_q, k), jnp.int32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(num_valid, levels, id_hvs, level_hvs, r)
+
+
+def _encode_search_banded_kernel(tb_ref, levels_ref, id_ref, lv_ref, r_ref,
+                                 starts_ref, ends_ref, ovals_ref, oidx_ref,
+                                 qenc_ref, svals_ref, sidx_ref, *, dim: int,
+                                 k: int, block_r: int, word_chunk: int,
+                                 packed: bool, r_padded: int,
+                                 num_features: int, num_levels: int,
+                                 block_f: int):
+    """Banded twin: only ``num_tiles`` R tiles per Q block are visited,
+    starting at the scalar-prefetched ``tb_ref[i]`` (OMS precursor
+    windows), with per-query ``[start, end)`` row bounds — the same
+    contract as ``topk_hamming._topk_banded_kernel``, with the encode
+    fused in at j == 0."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bq = levels_ref.shape[0]
+    br = r_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _():
+        qenc_ref[...] = _encode_block(
+            levels_ref, id_ref, lv_ref, num_features=num_features,
+            num_levels=num_levels, block_f=block_f, packed=packed)
+        svals_ref[...] = jnp.full((bq, k), _SENTINEL, jnp.int32)
+        sidx_ref[...] = r_padded + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, k), 1)
+
+    scores = _tile_scores(qenc_ref, r_ref, dim=dim, word_chunk=word_chunk,
+                          packed=packed)
+
+    tile = tb_ref[i] + j
+    col = tile * block_r + jax.lax.broadcasted_iota(jnp.int32, (bq, br), 1)
+    in_band = (col >= starts_ref[...]) & (col < ends_ref[...])
+    scores = jnp.where(in_band, scores, _SENTINEL)
+    svals, sidx = _select_topk(
+        jnp.concatenate([svals_ref[...], scores], axis=1),
+        jnp.concatenate([sidx_ref[...], col], axis=1), k)
+    svals_ref[...] = svals
+    sidx_ref[...] = sidx
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        ovals_ref[...] = svals
+        oidx_ref[...] = sidx
+
+
+def encode_search_banded_pallas_call(
+    levels: jax.Array,     # (Q, F) int32 quantized intensity levels
+    id_hvs: jax.Array,     # (F, D) int8 bipolar
+    level_hvs: jax.Array,  # (m, D) int8 bipolar
+    r: jax.Array,          # (R, W) uint32 packed, or (R, D) int8
+    tile_base: jax.Array,  # (Q // block_q,) int32 first R tile per Q block
+    starts: jax.Array,     # (Q, 1) int32 per-query band start row
+    ends: jax.Array,       # (Q, 1) int32 per-query band end row (exclusive)
+    *,
+    dim: int,
+    k: int,
+    num_tiles: int,
+    block_q: int = 8,
+    block_r: int = 128,
+    block_f: int = 128,
+    word_chunk: int = 32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Banded fused encode->search: grid (Q blocks, num_tiles), scanning
+    only tiles ``[tile_base[i], tile_base[i] + num_tiles)`` per Q block.
+    Caller contract matches ``topk_hamming_banded_pallas_call``."""
+    Q, F = levels.shape
+    m, D = level_hvs.shape
+    R, W = r.shape
+    packed = r.dtype == jnp.uint32
+    assert Q % block_q == 0 and R % block_r == 0 and F % block_f == 0
+    assert (D == 32 * W) if packed else (D == W)
+    assert not packed or W % word_chunk == 0
+    assert 1 <= num_tiles <= R // block_r
+
+    kernel = functools.partial(
+        _encode_search_banded_kernel, dim=dim, k=k, block_r=block_r,
+        word_chunk=word_chunk, packed=packed, r_padded=R, num_features=F,
+        num_levels=m, block_f=block_f)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q // block_q, num_tiles),
+        in_specs=[
+            pl.BlockSpec((block_q, F), lambda i, j, tb: (i, 0)),
+            pl.BlockSpec((F, D), lambda i, j, tb: (0, 0)),
+            pl.BlockSpec((m, D), lambda i, j, tb: (0, 0)),
+            pl.BlockSpec((block_r, W), lambda i, j, tb: (tb[i] + j, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j, tb: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j, tb: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j, tb: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j, tb: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, W), jnp.uint32 if packed else jnp.int8),
+            pltpu.VMEM((block_q, k), jnp.int32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tile_base, levels, id_hvs, level_hvs, r, starts, ends)

@@ -1,0 +1,48 @@
+"""Staged oracle for the fused encode -> pack -> top-k search kernel.
+
+Runs the exact pipeline the kernel fuses, stage at a time through HBM:
+Eq. 1 encode (``encode_levels_batch``), deterministic bank-form encoding
+(bit-pack or int8 cast — ``repro.serve.db_search.encode_queries``'s
+math), then the full-matrix top-k oracle of ``repro.kernels.
+topk_hamming.ref``. Bit-identity against this — indices, scores, tie
+order, overflow slots — is the kernel's correctness contract.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hd.encoding import encode_levels_batch
+from repro.core.hd.similarity import bitpack_bipolar
+from repro.kernels.topk_hamming.ref import (
+    topk_hamming_banded_ref,
+    topk_hamming_ref,
+)
+
+
+def encode_queries_ref(levels, id_hvs, level_hvs, *, packed: bool):
+    """Staged query encoding: levels -> bipolar HVs -> bank storage form."""
+    hv = encode_levels_batch(jnp.asarray(levels, jnp.int32), id_hvs,
+                             level_hvs)
+    return bitpack_bipolar(hv) if packed else hv.astype(jnp.int8)
+
+
+def encode_search_ref(levels, id_hvs, level_hvs, r, *, k: int,
+                      num_valid=None):
+    """(Q, F) levels x (R, W|D) bank -> (idx (Q, k), vals (Q, k)) int32."""
+    q = encode_queries_ref(levels, id_hvs, level_hvs,
+                           packed=r.dtype == jnp.uint32)
+    return topk_hamming_ref(q, r, int(id_hvs.shape[1]), k,
+                            num_valid=num_valid)
+
+
+def encode_search_banded_ref(levels, id_hvs, level_hvs, r, starts, lens, *,
+                             k: int, num_valid=None):
+    """Banded staged oracle: encode, then sentinel-mask columns outside
+    each query's ``[start, start + len)`` band before ``lax.top_k``."""
+    q = encode_queries_ref(levels, id_hvs, level_hvs,
+                           packed=r.dtype == jnp.uint32)
+    return topk_hamming_banded_ref(q, r, jnp.asarray(starts, jnp.int32),
+                                   jnp.asarray(lens, jnp.int32),
+                                   int(id_hvs.shape[1]), k,
+                                   num_valid=num_valid)

@@ -20,10 +20,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _hd_encode_kernel(levels_ref, id_ref, lv_ref, o_ref, *, num_features: int,
-                      num_levels: int, block_f: int):
+def encode_acc(levels_ref, id_ref, lv_ref, *, num_features: int,
+               num_levels: int, block_f: int) -> jax.Array:
+    """In-kernel Eq. 1 accumulator: (bb, bd) float32 sums over features.
+
+    The shared inner loop of the standalone encode kernel and the fused
+    encode->search kernel (``repro.kernels.encode_search``): accumulates
+    ``acc[b, d] += present[b,f] * LV[level[b,f], d] * ID[f, d]`` over
+    feature blocks. float32 accumulation of +-1 terms is exact up to
+    2**24 summands, far beyond any feature count, so ``sign(acc)`` is
+    bit-identical to the int32 einsum oracle.
+    """
     bb = levels_ref.shape[0]
-    bd = o_ref.shape[1]
+    bd = id_ref.shape[1]
     lvs = lv_ref[...].astype(jnp.float32)         # (m, bd)
 
     def f_body(fb, acc):
@@ -45,7 +54,13 @@ def _hd_encode_kernel(levels_ref, id_ref, lv_ref, o_ref, *, num_features: int,
 
     nfb = num_features // block_f
     acc = jnp.zeros((bb, bd), jnp.float32)
-    acc = jax.lax.fori_loop(0, nfb, f_body, acc)
+    return jax.lax.fori_loop(0, nfb, f_body, acc)
+
+
+def _hd_encode_kernel(levels_ref, id_ref, lv_ref, o_ref, *, num_features: int,
+                      num_levels: int, block_f: int):
+    acc = encode_acc(levels_ref, id_ref, lv_ref, num_features=num_features,
+                     num_levels=num_levels, block_f=block_f)
     o_ref[...] = jnp.where(acc > 0, jnp.int8(1), jnp.int8(-1))
 
 

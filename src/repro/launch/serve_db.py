@@ -26,15 +26,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SpecPCMConfig, encode_and_pack
+from repro.core.hd.encoding import quantize_levels
 from repro.dist.sharding import set_mesh
 from repro.launch.mesh import make_debug_mesh
 from repro.serve import (
     BankRegistry,
     DBSearchServer,
     OMSConfig,
+    QueryEncoder,
+    oms_plan,
+    oms_search_levels,
     oms_search_with_fdr,
+    search_database_levels,
     search_with_fdr,
 )
+from repro.serve.db_search import fdr_route
 from repro.spectra import SyntheticMSConfig, generate_dataset
 from repro.spectra.fdr import make_decoys
 from repro.spectra.synthetic import generate_query_set
@@ -86,6 +92,20 @@ def main(argv=None):
     ap.add_argument("--open-tol", type=float, default=200.0,
                     help="how much heavier than a reference an OMS query "
                          "may be (the modification-mass budget)")
+    ap.add_argument("--continuous", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="continuous-batching mode: keep --num-slots "
+                         "batches in flight and admit queued requests the "
+                         "moment a slot frees, instead of flush-and-wait "
+                         "(collapses tail latency; --flush-ms is inert)")
+    ap.add_argument("--num-slots", type=int, default=2,
+                    help="in-flight batch slots for --continuous (2 = "
+                         "double-buffered host prep vs device search)")
+    ap.add_argument("--fused-e2e", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="submit raw quantized spectra and run the fused "
+                         "encode->pack->search kernel per shard (one device "
+                         "dispatch; the query HV never touches HBM)")
     args = ap.parse_args(argv)
 
     if args.tenants < 1:
@@ -139,29 +159,59 @@ def main(argv=None):
         qs = generate_query_set(ds, ms, num_queries=n_q,
                                 seed=args.seed + 31 * t + 1)
         datasets[tenant] = (np.asarray(ds.identity), np.asarray(qs.identity))
-        query_pools[tenant] = np.asarray(encode_and_pack(qs.spectra, cfg))
+        if args.fused_e2e:
+            # raw quantized spectra: the server encodes on the device, fused
+            query_pools[tenant] = np.asarray(
+                quantize_levels(qs.spectra, cfg.num_levels), np.int32)
+        else:
+            query_pools[tenant] = np.asarray(encode_and_pack(qs.spectra, cfg))
         precursor_pools[tenant] = np.asarray(qs.precursor, np.float32)
     print(f"{args.tenants} tenant bank(s) registered (lazy; built on first "
           f"request), D={dim}, pack={pack}, fused={args.fused}, "
-          f"oms={args.oms}")
+          f"oms={args.oms}, fused_e2e={args.fused_e2e}, "
+          f"mode={'continuous' if args.continuous else 'flush-sync'}")
+
+    # every tenant encodes with the same SpecPCMConfig, so one query-side
+    # codebook bundle serves the whole fleet (bit-identical to the
+    # encode_and_pack the banks were built with: mlc_bits=1 packs to
+    # identity)
+    encoder = (QueryEncoder.from_config(
+        dim=dim, num_features=num_bins, num_levels=cfg.num_levels,
+        seed=args.seed) if args.fused_e2e else None)
 
     server = DBSearchServer(
         registry, k=args.k, fdr=args.fdr, max_batch_size=max_batch,
         flush_timeout_s=args.flush_ms / 1e3,
         cache_bytes=int(args.cache_mb * 2**20) or None,
-        buckets=args.buckets, fairness_cap=args.fairness_cap, oms=oms_cfg)
+        buckets=args.buckets, fairness_cap=args.fairness_cap, oms=oms_cfg,
+        encoder=encoder, fused_e2e=args.fused_e2e,
+        continuous=args.continuous, num_slots=args.num_slots)
 
     # warm the jit cache on the hot tenant (search + FDR routing) for the
     # largest bucket so latency numbers measure serving, not compile; cold
     # tenants pay their lazy shard+compile on first flush by design.
     db0 = registry.get("tenant0")
+    warm_prec = None
     if args.oms:
         warm_prec = precursor_pools["tenant0"][:max_batch]
         if warm_prec.shape[0] < max_batch:
             warm_prec = np.resize(warm_prec, max_batch)
+        warm_prec = np.sort(warm_prec)
+    if args.fused_e2e:
+        warm_q = jnp.zeros((max_batch, num_bins), jnp.int32)
+        if args.oms:
+            plan = oms_plan(db0, warm_prec, oms_cfg)
+            idx, vals = oms_search_levels(db0, encoder, warm_q, plan,
+                                          args.k, fused_e2e=True)
+            fdr_route(db0, idx, vals, fdr=args.fdr,
+                      valid=jnp.asarray(plan.has_candidate))
+        else:
+            idx, vals = search_database_levels(db0, encoder, warm_q, args.k,
+                                               fused_e2e=True)
+            fdr_route(db0, idx, vals, fdr=args.fdr)
+    elif args.oms:
         oms_search_with_fdr(db0, jnp.zeros((max_batch, dim), jnp.int8),
-                            np.sort(warm_prec), k=args.k, fdr=args.fdr,
-                            cfg=oms_cfg)
+                            warm_prec, k=args.k, fdr=args.fdr, cfg=oms_cfg)
     else:
         search_with_fdr(db0, jnp.zeros((max_batch, dim), jnp.int8), k=args.k,
                         fdr=args.fdr)
@@ -190,6 +240,13 @@ def main(argv=None):
             meta[rid] = (tenant, qi)
             sent += 1
         done.extend(server.step())
+        # continuous mode decouples submission from device completion;
+        # with no pacing the driver is an infinite-rate open loop and
+        # latency just measures overload depth. Closed-loop backpressure
+        # (block-retire once the backlog exceeds a bucket) keeps the run
+        # below saturation so the numbers measure scheduling.
+        while args.continuous and len(server.queue) >= max_batch:
+            done.extend(server.step(force=True))
         if rng.random() < 0.3:  # idle gap: lets the flush timeout fire
             time.sleep(args.flush_ms / 1e3)
             done.extend(server.step())
@@ -211,7 +268,15 @@ def main(argv=None):
           f"bucket usage {s['buckets']})")
     print(f"throughput: {s['qps']:.1f} queries/sec")
     print(f"latency: p50 {s['p50_ms']:.2f} ms, p95 {s['p95_ms']:.2f} ms, "
-          f"mean {s['mean_ms']:.2f} ms")
+          f"mean {s['mean_ms']:.2f} ms (queue wait p50 "
+          f"{s['queue_wait_p50_ms']:.2f} ms, p95 "
+          f"{s['queue_wait_p95_ms']:.2f} ms)")
+    sched = s.get("scheduler")
+    if sched is not None:
+        print(f"scheduler: {sched['num_slots']} slots, "
+              f"{sched['dispatched_batches']} dispatched / "
+              f"{sched['retired_batches']} retired batches, "
+              f"{sched['cancellations']} cancellations")
     qc = s["query_cache"]
     if qc is not None:
         print(f"query-HV cache: {qc['hits']} hits / {qc['misses']} misses "

@@ -21,12 +21,20 @@ with lazy shard-on-first-use, pinning, and LRU eviction of cold banks.
 ``db_search.DBSearchServer`` glues all of it together — shape-bucketed
 batch dispatch, per-tenant latency/cache accounting — and routes the
 merged results through target-decoy FDR filtering (``repro.spectra.fdr``).
-``repro.launch.serve_db`` is the runnable entry point.
+Device work sits behind the ``SearchExecutor`` dispatch/poll/finalize
+seam so the synchronous flush loop and the continuous-batching
+``scheduler.ContinuousScheduler`` (fixed in-flight slot pool, per-step
+admission — the tail-latency mode) share one code path; with a
+``QueryEncoder`` the server accepts raw quantized spectra and runs the
+fused encode->pack->search kernel end to end. ``repro.launch.serve_db``
+is the runnable entry point.
 """
 
 from repro.serve.cache import BankRegistry, QueryHVCache
 from repro.serve.db_search import (
     DBSearchServer,
+    QueryEncoder,
+    SearchExecutor,
     ShardedDatabase,
     bucket_for,
     encode_queries,
@@ -34,13 +42,16 @@ from repro.serve.db_search import (
     oms_plan,
     oms_search,
     oms_search_encoded,
+    oms_search_levels,
     oms_search_with_fdr,
     search_database,
     search_database_encoded,
+    search_database_levels,
     search_with_fdr,
     shard_database,
     sharded_topk_search,
 )
+from repro.serve.scheduler import ContinuousScheduler, Slot
 from repro.serve.oms import (
     OMSConfig,
     OMSPlan,
@@ -52,15 +63,19 @@ from repro.serve.queue import LatencyStats, MicroBatchQueue, Request
 
 __all__ = [
     "BankRegistry",
+    "ContinuousScheduler",
     "DBSearchServer",
     "LatencyStats",
     "MicroBatchQueue",
     "OMSConfig",
     "OMSPlan",
     "PrecursorIndex",
+    "QueryEncoder",
     "QueryHVCache",
     "Request",
+    "SearchExecutor",
     "ShardedDatabase",
+    "Slot",
     "bucket_for",
     "build_precursor_index",
     "encode_queries",
@@ -68,10 +83,12 @@ __all__ = [
     "oms_plan",
     "oms_search",
     "oms_search_encoded",
+    "oms_search_levels",
     "oms_search_with_fdr",
     "plan_candidates",
     "search_database",
     "search_database_encoded",
+    "search_database_levels",
     "search_with_fdr",
     "shard_database",
     "sharded_topk_search",

@@ -48,7 +48,13 @@ tenant-homogeneous micro-batches out of
 :class:`~repro.serve.cache.BankRegistry` (lazy shard-on-first-use, LRU),
 query encodes memoized in a :class:`~repro.serve.cache.QueryHVCache`,
 and batch shapes padded to a bounded bucket ladder so tenant switches
-reuse the jit cache instead of recompiling.
+reuse the jit cache instead of recompiling. Device work runs behind the
+:class:`SearchExecutor` dispatch/poll/finalize seam, shared by the
+synchronous flush loop and the continuous-batching scheduler
+(:mod:`repro.serve.scheduler`); with a :class:`QueryEncoder` the server
+additionally accepts *raw quantized spectra* and encodes on the device —
+staged, or as one fused encode->pack->search kernel dispatch per shard
+(:mod:`repro.kernels.encode_search`, ``fused_e2e=True``).
 """
 
 from __future__ import annotations
@@ -65,6 +71,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.hd.encoding import (
+    HDEncoderConfig,
+    encode_levels_batch,
+    make_codebooks,
+)
 from repro.core.hd.similarity import (
     bitpack_bipolar,
     dot_similarity,
@@ -80,6 +91,7 @@ from repro.serve.oms import (
     plan_candidates,
 )
 from repro.serve.queue import LatencyStats, MicroBatchQueue, Request
+from repro.serve.scheduler import ContinuousScheduler
 from repro.spectra.fdr import fdr_filter
 
 _SENTINEL = jnp.iinfo(jnp.int32).min
@@ -530,8 +542,13 @@ def oms_search_encoded(db: ShardedDatabase, q_enc: jax.Array, plan: OMSPlan,
                              int(starts.shape[0]), nt)
         idx, vals = fn(q_enc, starts, ends, db.data)
 
-    # overflow slots -> the oracle's ascending masked rows, then translate
-    # every (now in-range) sorted row back to its original bank row
+    return _oms_finish(db, idx, vals, starts, ends)
+
+
+def _oms_finish(db: ShardedDatabase, idx, vals, starts, ends):
+    """Shared OMS tail: overflow slots -> the oracle's ascending masked
+    rows, then translate every (now in-range) sorted row back to its
+    original bank row."""
     from repro.kernels.topk_hamming import canonicalize_overflow_slots
     s_c = jnp.clip(starts, 0, db.num_rows)
     e_c = jnp.clip(ends, s_c, db.num_rows)
@@ -563,6 +580,239 @@ def oms_search_with_fdr(db: ShardedDatabase, queries: jax.Array,
     idx, vals, plan = oms_search(db, queries, query_prec, k, cfg)
     return fdr_route(db, idx, vals, fdr=fdr,
                      valid=jnp.asarray(plan.has_candidate))
+
+
+# --------------------------------------------------------------------------
+# end-to-end routes: raw quantized spectra in, top-k out
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QueryEncoder:
+    """The query-side HD codebooks (Eq. 1) bundled for the e2e routes.
+
+    Built from the *same* :class:`~repro.core.hd.encoding.HDEncoderConfig`
+    the reference bank was encoded with (dim/num_features/num_levels/seed),
+    so query and reference HVs live in one space. Holding the codebooks —
+    rather than re-deriving them per batch — is what lets the serving loop
+    accept raw (F,) quantized level vectors and encode on the device,
+    staged or fused.
+    """
+
+    id_hvs: jax.Array     # (F, D) int8 bipolar ID codebook
+    level_hvs: jax.Array  # (m, D) int8 bipolar level codebook
+
+    @property
+    def num_features(self) -> int:
+        return int(self.id_hvs.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.id_hvs.shape[1])
+
+    @property
+    def num_levels(self) -> int:
+        return int(self.level_hvs.shape[0])
+
+    @classmethod
+    def from_config(cls, *, dim: int, num_features: int, num_levels: int,
+                    seed: int = 0) -> "QueryEncoder":
+        id_hvs, level_hvs = make_codebooks(HDEncoderConfig(
+            dim=dim, num_features=num_features, num_levels=num_levels,
+            seed=seed))
+        return cls(id_hvs=id_hvs, level_hvs=level_hvs)
+
+
+def _check_levels(db: ShardedDatabase, enc: QueryEncoder, levels) -> None:
+    if enc.dim != db.dim:
+        raise ValueError(f"encoder dim {enc.dim} != bank dim {db.dim}")
+    if levels.ndim != 2 or levels.shape[1] != enc.num_features:
+        raise ValueError(
+            f"levels shape {levels.shape} != (Q, {enc.num_features})")
+
+
+def _local_topk_e2e(levels, enc: QueryEncoder, refs_local, base, k: int,
+                    num_rows: int, dim: int):
+    """Fully-fused per-shard twin of encode + ``_local_topk_fused``: one
+    Pallas dispatch encodes the raw levels (Eq. 1), packs, and streams the
+    shard's reference tiles — the query hypervector never reaches HBM.
+    Same sentinel masking and base translation as the staged pair."""
+    from repro.kernels.encode_search import encode_search_pallas
+    shard_rows = refs_local.shape[0]
+    nv = jnp.clip(jnp.asarray(num_rows - base, jnp.int32), 0, shard_rows)
+    idx, vals = encode_search_pallas(levels, enc.id_hvs, enc.level_hvs,
+                                     refs_local, dim=dim, k=k, num_valid=nv)
+    return vals, idx + jnp.asarray(base, jnp.int32)
+
+
+def _local_oms_e2e(levels, enc: QueryEncoder, refs_local, base, k: int,
+                   num_rows: int, dim: int, starts, ends, num_tiles: int):
+    """Fused-e2e twin of ``_local_oms_topk_fused``: one banded
+    encode->search dispatch per band, then the same ascending-block local
+    merge. Overflow slots keep their kernel fillers (``canonicalize=
+    False``) for the caller's global canonicalization, exactly like the
+    encoded-query path."""
+    from repro.kernels.encode_search import encode_search_banded_pallas
+    shard_rows = refs_local.shape[0]
+    nv = jnp.clip(jnp.asarray(num_rows - base, jnp.int32), 0, shard_rows)
+    vals_blocks, idx_blocks = [], []
+    for b in range(starts.shape[0]):
+        s_l = jnp.clip(starts[b] - base, 0, shard_rows).astype(jnp.int32)
+        e_l = jnp.clip(ends[b] - base, s_l, shard_rows).astype(jnp.int32)
+        idx, vals = encode_search_banded_pallas(
+            levels, enc.id_hvs, enc.level_hvs, refs_local, s_l, e_l - s_l,
+            dim=dim, k=k, num_valid=nv, num_tiles=num_tiles,
+            block_q=_OMS_BLOCK_Q, canonicalize=False)
+        vals_blocks.append(vals)
+        idx_blocks.append(idx + jnp.asarray(base, jnp.int32))
+    if len(vals_blocks) == 1:
+        return vals_blocks[0], idx_blocks[0]
+    idx, vals = _merge_topk(jnp.concatenate(vals_blocks, axis=1),
+                            jnp.concatenate(idx_blocks, axis=1), k)
+    return vals, idx
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_e2e_fn(mesh: Mesh, axis: str, shard_rows: int, num_rows: int,
+                    dim: int, k: int, batch_sharded: bool):
+    """Compile the shard_map fused-e2e search for one (geometry, k, batch)
+    shape. Codebooks are replicated; only the bank is row-sharded."""
+    q_spec = P("data", None) if batch_sharded else P(None, None)
+    rep = P(None, None)
+
+    def body(levels, id_hvs, level_hvs, refs_local):
+        from repro.kernels.encode_search import encode_search_pallas
+        base = jax.lax.axis_index(axis).astype(jnp.int32) * shard_rows
+        nv = jnp.clip(num_rows - base, 0, shard_rows)
+        idx, vals = encode_search_pallas(levels, id_hvs, level_hvs,
+                                         refs_local, dim=dim, k=k,
+                                         num_valid=nv)
+        vals_all = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
+        idx_all = jax.lax.all_gather(idx + base, axis, axis=1, tiled=True)
+        return _merge_topk(vals_all, idx_all, k)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(q_spec, rep, rep, P(axis, None)),
+        out_specs=(q_spec, q_spec), check_rep=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_oms_e2e_fn(mesh: Mesh, axis: str, shard_rows: int,
+                        num_rows: int, dim: int, k: int,
+                        batch_sharded: bool, num_bands: int, num_tiles: int):
+    """Compile the shard_map fused-e2e OMS search (banded twin of
+    ``_sharded_e2e_fn``; same tile-budget bucketing as ``_sharded_oms_fn``)."""
+    q_spec = P("data", None) if batch_sharded else P(None, None)
+    band_spec = P(None, "data") if batch_sharded else P(None, None)
+    rep = P(None, None)
+
+    def body(levels, id_hvs, level_hvs, starts, ends, refs_local):
+        base = jax.lax.axis_index(axis).astype(jnp.int32) * shard_rows
+        enc = QueryEncoder(id_hvs=id_hvs, level_hvs=level_hvs)
+        vals, gidx = _local_oms_e2e(levels, enc, refs_local, base, k,
+                                    num_rows, dim, starts, ends, num_tiles)
+        vals_all = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
+        idx_all = jax.lax.all_gather(gidx, axis, axis=1, tiled=True)
+        return _merge_topk(vals_all, idx_all, k)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, rep, rep, band_spec, band_spec, P(axis, None)),
+        out_specs=(q_spec, q_spec), check_rep=False))
+
+
+def search_database_levels(db: ShardedDatabase, enc: QueryEncoder,
+                           levels: jax.Array, k: int, *,
+                           fused_e2e: bool = False
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Top-k search straight from raw (Q, F) quantized level vectors.
+
+    Staged (default): Eq. 1 encode (``encode_levels_batch``) -> bank-form
+    encode (``encode_queries``) -> ``search_database_encoded`` — each
+    stage round-trips HBM, and the encoded rows are cacheable.
+
+    Fused (``fused_e2e=True``): one Pallas dispatch per shard runs encode
+    -> bit-pack -> streaming top-k with the query HV and score tiles held
+    in VMEM throughout; only the (Q, k) winners reach HBM.
+
+    Both paths are bit-identical — indices, scores, tie order — in every
+    routed configuration (single device, emulated shards, mesh).
+    """
+    levels = jnp.asarray(levels, jnp.int32)
+    _check_levels(db, enc, levels)
+    if not fused_e2e:
+        hv = encode_levels_batch(levels, enc.id_hvs, enc.level_hvs)
+        return search_database_encoded(db, encode_queries(db, hv), k)
+    _check_k(db, k)
+
+    if db.mesh is None:
+        if db.emulated_shards > 1:
+            vals_blocks, idx_blocks = [], []
+            for s in range(db.emulated_shards):
+                r_local = db.data[s * db.shard_rows:(s + 1) * db.shard_rows]
+                vals, gidx = _local_topk_e2e(levels, enc, r_local,
+                                             s * db.shard_rows, k,
+                                             db.num_rows, db.dim)
+                vals_blocks.append(vals)
+                idx_blocks.append(gidx)
+            return _merge_topk(jnp.concatenate(vals_blocks, axis=1),
+                               jnp.concatenate(idx_blocks, axis=1), k)
+        vals, gidx = _local_topk_e2e(levels, enc, db.data, 0, k,
+                                     db.num_rows, db.dim)
+        return gidx, vals
+
+    data_n = db.mesh.shape.get("data", 1)
+    batch_sharded = data_n > 1 and levels.shape[0] % data_n == 0
+    fn = _sharded_e2e_fn(db.mesh, db.axis, db.shard_rows, db.num_rows,
+                         db.dim, k, batch_sharded)
+    return fn(levels, enc.id_hvs, enc.level_hvs, db.data)
+
+
+def oms_search_levels(db: ShardedDatabase, enc: QueryEncoder,
+                      levels: jax.Array, plan: OMSPlan, k: int, *,
+                      fused_e2e: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
+    """OMS top-k straight from raw (Q, F) level vectors (queries must be
+    ordered to match ``plan`` — i.e. precursor-sorted like the bank).
+    Staged vs fused exactly as :func:`search_database_levels`; both end in
+    the shared overflow-canonicalize + perm-translate tail, so results are
+    bit-identical to ``oms_search_encoded`` over the staged encodes."""
+    levels = jnp.asarray(levels, jnp.int32)
+    _check_levels(db, enc, levels)
+    if db.oms is None:
+        raise ValueError("bank was built without precursor=")
+    if not fused_e2e:
+        hv = encode_levels_batch(levels, enc.id_hvs, enc.level_hvs)
+        return oms_search_encoded(db, encode_queries(db, hv), plan, k)
+    _check_k(db, k)
+    starts = jnp.asarray(plan.starts, jnp.int32)
+    ends = starts + jnp.asarray(plan.lens, jnp.int32)
+    nt = int(plan.num_tiles)
+
+    if db.mesh is None:
+        if db.emulated_shards > 1:
+            vals_blocks, idx_blocks = [], []
+            for s in range(db.emulated_shards):
+                r_local = db.data[s * db.shard_rows:(s + 1) * db.shard_rows]
+                vals, gidx = _local_oms_e2e(levels, enc, r_local,
+                                            s * db.shard_rows, k,
+                                            db.num_rows, db.dim, starts,
+                                            ends, nt)
+                vals_blocks.append(vals)
+                idx_blocks.append(gidx)
+            idx, vals = _merge_topk(jnp.concatenate(vals_blocks, axis=1),
+                                    jnp.concatenate(idx_blocks, axis=1), k)
+        else:
+            vals, idx = _local_oms_e2e(levels, enc, db.data, 0, k,
+                                       db.num_rows, db.dim, starts, ends, nt)
+    else:
+        data_n = db.mesh.shape.get("data", 1)
+        batch_sharded = data_n > 1 and levels.shape[0] % data_n == 0
+        fn = _sharded_oms_e2e_fn(db.mesh, db.axis, db.shard_rows,
+                                 db.num_rows, db.dim, k, batch_sharded,
+                                 int(starts.shape[0]), nt)
+        idx, vals = fn(levels, enc.id_hvs, enc.level_hvs, starts, ends,
+                       db.data)
+    return _oms_finish(db, idx, vals, starts, ends)
 
 
 def sharded_topk_search(queries: jax.Array, refs: jax.Array, k: int, *,
@@ -700,6 +950,143 @@ class QueryResult:
     has_candidate: bool = True  # precursor window non-empty (OMS mode)
 
 
+@dataclasses.dataclass
+class BatchHandle:
+    """One dispatched batch's in-flight device work (executor-internal).
+
+    ``idx``/``vals`` are *unrealized* device arrays until ``finalize``:
+    JAX's async dispatch returns immediately, so the host goes back to
+    assembling the next batch while the device searches this one.
+    """
+
+    reqs: list[Request]
+    tenant: str
+    db: ShardedDatabase
+    n: int                # real rows (the rest is bucket padding)
+    idx: jax.Array
+    vals: jax.Array
+    valid: np.ndarray | None = None  # OMS has_candidate, submit order
+    inv: np.ndarray | None = None    # OMS unsort permutation
+    oms: bool = False
+
+
+class SearchExecutor:
+    """The production device executor behind the scheduler seam.
+
+    Implements the three-method protocol of
+    :class:`~repro.serve.scheduler.ContinuousScheduler` (``dispatch`` /
+    ``poll`` / ``finalize``) on top of a :class:`DBSearchServer`'s banks,
+    caches, and stats — and is the *only* place serving work touches the
+    device, so flush-sync and continuous modes share one code path:
+
+      * ``dispatch`` stamps ``t_dispatch``, assembles the bucket-padded
+        host batch (through the query-HV cache on the encoded/staged
+        routes), ships it with ``jax.device_put`` (async H2D), and
+        launches the jitted search without blocking — with two scheduler
+        slots this is classic double-buffering: slot B's host-side prep
+        and transfer overlap slot A's device search;
+      * ``poll`` asks the result arrays whether the computation finished
+        (``Array.is_ready``; conservatively True on runtimes without it);
+      * ``finalize`` blocks on the device values, unsorts OMS batches,
+        routes FDR, fills per-request results, stamps ``t_done``, records
+        latency stats, and drops cancelled requests.
+
+    Tests replace this class with fake executors to make scheduling
+    decisions deterministic — see ``tests/test_scheduler.py``.
+    """
+
+    def __init__(self, server: "DBSearchServer"):
+        self.server = server
+
+    def dispatch(self, reqs: list[Request]) -> BatchHandle:
+        srv = self.server
+        t = srv._clock()
+        for r in reqs:
+            r.t_dispatch = t
+        tenant = reqs[0].tenant
+        db = srv.banks.get(tenant)  # lazy shard-on-first-use
+        n = len(reqs)
+        bucket = bucket_for(n, srv.buckets)
+        srv._bucket_counts[bucket] += 1
+        if srv.oms is not None:
+            return self._dispatch_oms(reqs, db, n, bucket, tenant)
+        if srv.encoder is not None and srv.fused_e2e:
+            batch = jax.device_put(srv._levels_batch(reqs, bucket))
+            idx, vals = search_database_levels(db, srv.encoder, batch,
+                                               srv.k, fused_e2e=True)
+        else:
+            batch = jax.device_put(
+                srv._encode_batch(reqs, db, bucket, tenant))
+            idx, vals = search_database_encoded(db, batch, srv.k)
+        return BatchHandle(reqs=reqs, tenant=tenant, db=db, n=n, idx=idx,
+                           vals=vals)
+
+    def _dispatch_oms(self, reqs: list[Request], db: ShardedDatabase,
+                      n: int, bucket: int, tenant: str) -> BatchHandle:
+        """OMS dispatch: precursor-sort the batch (nearby masses share
+        kernel tiles, keeping the static tile budget small — pad rows
+        inherit the highest real precursor), plan host-side, launch the
+        banded search. Results unsort at finalize; FDR routing is
+        order-independent."""
+        srv = self.server
+        prec = np.asarray([r.precursor for r in reqs], np.float32)
+        order = np.argsort(prec, kind="stable")
+        inv = np.argsort(order, kind="stable")
+        prec_padded = np.concatenate(
+            [prec[order], np.full(bucket - n, prec[order][-1], np.float32)])
+        plan = oms_plan(db, prec_padded, srv.oms)
+        if srv.encoder is not None and srv.fused_e2e:
+            batch = srv._levels_batch(reqs, bucket)
+            sorted_batch = np.concatenate([batch[:n][order], batch[n:]])
+            idx, vals = oms_search_levels(
+                db, srv.encoder, jax.device_put(sorted_batch), plan, srv.k,
+                fused_e2e=True)
+        else:
+            batch = srv._encode_batch(reqs, db, bucket, tenant)
+            sorted_batch = np.concatenate([batch[:n][order], batch[n:]])
+            idx, vals = oms_search_encoded(
+                db, jax.device_put(sorted_batch), plan, srv.k)
+        valid = plan.has_candidate[:n][inv]
+        srv._oms_batches += 1
+        srv._oms_cand_frac += plan.candidate_fraction
+        srv._oms_scan_frac += plan.scanned_fraction
+        srv._oms_no_candidate += int((~valid).sum())
+        return BatchHandle(reqs=reqs, tenant=tenant, db=db, n=n, idx=idx,
+                           vals=vals, valid=valid, inv=inv, oms=True)
+
+    def poll(self, handle: BatchHandle) -> bool:
+        return bool(getattr(handle.vals, "is_ready", lambda: True)())
+
+    def finalize(self, handle: BatchHandle) -> list[Request]:
+        srv = self.server
+        n = handle.n
+        idx = np.asarray(handle.idx)[:n]   # blocks until the device is done
+        vals = np.asarray(handle.vals)[:n]
+        if handle.inv is not None:
+            idx, vals = idx[handle.inv], vals[handle.inv]
+        valid = None if handle.valid is None else jnp.asarray(handle.valid)
+        routed = fdr_route(handle.db, jnp.asarray(idx), jnp.asarray(vals),
+                           fdr=srv.fdr, valid=valid)
+        t_done = srv._clock()
+        live: list[Request] = []
+        for i, r in enumerate(handle.reqs):
+            if r.cancelled:
+                continue
+            r.result = QueryResult(
+                indices=routed.indices[i], scores=routed.scores[i],
+                is_target=bool(routed.is_target[i]),
+                accept=bool(routed.accept[i]), match=int(routed.match[i]),
+                has_candidate=(True if routed.valid is None
+                               else bool(routed.valid[i])))
+            r.t_done = t_done
+            live.append(r)
+        if live:
+            srv.stats.record_batch(live)
+            srv.tenant_stats.setdefault(
+                handle.tenant, LatencyStats()).record_batch(live)
+        return live
+
+
 class DBSearchServer:
     """Micro-batched, multi-tenant sharded DB-search server (host loop).
 
@@ -723,6 +1110,24 @@ class DBSearchServer:
 
     The cache is a pure memo of the deterministic encode, so cached and
     cold paths return bit-identical results.
+
+    **Queue modes.** Flush-sync (default): ``step`` runs one micro-batch
+    synchronously when the queue's flush policy fires — simple, but every
+    request in a flush waits for the whole batch, and the *next* flush
+    can't start until this one finishes. Continuous (``continuous=True``):
+    a :class:`~repro.serve.scheduler.ContinuousScheduler` keeps
+    ``num_slots`` batches in flight, retiring completed slots and
+    admitting queued requests into freed slots every ``step`` — tail
+    latency collapses because nothing waits on a flush timeout or an
+    unrelated batch (``flush_timeout_s`` is inert in this mode). Both
+    modes run the identical :class:`SearchExecutor` device path, so
+    results are bit-identical across modes.
+
+    **Query forms.** With ``encoder=`` (a :class:`QueryEncoder`), submits
+    carry raw (F,) quantized level vectors and the server encodes on the
+    device — staged (cacheable, default) or, with ``fused_e2e=True``, as
+    one fused encode->pack->search kernel dispatch per shard. Without an
+    encoder, submits carry pre-encoded bipolar (D,) HVs as before.
     """
 
     def __init__(self, db: ShardedDatabase | BankRegistry, *, k: int = 4,
@@ -732,7 +1137,11 @@ class DBSearchServer:
                  cache_bytes: int | None = 64 << 20,
                  buckets: int | Sequence[int] | None = None,
                  fairness_cap: int | None = None,
-                 oms: OMSConfig | None = None):
+                 oms: OMSConfig | None = None,
+                 encoder: QueryEncoder | None = None,
+                 fused_e2e: bool = False,
+                 continuous: bool = False, num_slots: int = 2,
+                 executor=None):
         if isinstance(db, BankRegistry):
             self.db = None
             self.banks = db
@@ -765,31 +1174,84 @@ class DBSearchServer:
         self._oms_cand_frac = 0.0
         self._oms_scan_frac = 0.0
         self._oms_no_candidate = 0
+        self.encoder = encoder
+        self.fused_e2e = bool(fused_e2e)
+        if self.fused_e2e and encoder is None:
+            raise ValueError("fused_e2e=True requires encoder=")
+        self.executor = SearchExecutor(self) if executor is None else executor
+        self.scheduler = (ContinuousScheduler(self.queue, self.executor,
+                                              num_slots=num_slots,
+                                              clock=clock)
+                          if continuous else None)
 
     def submit(self, query_hv, tenant: str = "default",
                precursor: float | None = None) -> int:
-        """Enqueue one encoded query HV (D,) for ``tenant`` (which must be
-        registered); returns the request id. OMS-mode servers require the
-        query's precursor mass."""
-        q = np.asarray(query_hv, dtype=np.int8)
+        """Enqueue one query for ``tenant`` (which must be registered);
+        returns the request id. The query is an encoded bipolar HV (D,) —
+        or, when the server was built with ``encoder=``, a raw quantized
+        level vector (F,). OMS-mode servers require the query's precursor
+        mass."""
         dim = self.banks.dim(tenant)  # KeyError for unknown tenants
-        if q.shape != (dim,):
-            raise ValueError(f"query shape {q.shape} != ({dim},)")
+        if self.encoder is not None:
+            if self.encoder.dim != dim:
+                raise ValueError(f"encoder dim {self.encoder.dim} != "
+                                 f"bank dim {dim} for tenant {tenant!r}")
+            q = np.asarray(query_hv, dtype=np.int32)
+            if q.shape != (self.encoder.num_features,):
+                raise ValueError(
+                    f"query shape {q.shape} != "
+                    f"({self.encoder.num_features},) levels")
+        else:
+            q = np.asarray(query_hv, dtype=np.int8)
+            if q.shape != (dim,):
+                raise ValueError(f"query shape {q.shape} != ({dim},)")
         if self.oms is not None and precursor is None:
             raise ValueError("OMS serving mode requires precursor= on submit")
         return self.queue.submit(q, tenant=tenant, precursor=precursor)
 
+    def cancel(self, rid: int) -> bool:
+        """Best-effort cancel: un-queue a pending request, or (continuous
+        mode) drop an in-flight one's result at retire time."""
+        if self.scheduler is not None:
+            return self.scheduler.cancel(rid)
+        return self.queue.cancel(rid)
+
+    def _encode_rows(self, db: ShardedDatabase, qs: jax.Array) -> jax.Array:
+        """Encode stacked raw queries into the bank's storage form: the
+        deterministic bank-form cast for pre-encoded HVs, or the staged
+        Eq. 1 encode first when the server carries a query encoder."""
+        if self.encoder is not None:
+            hv = encode_levels_batch(qs.astype(jnp.int32),
+                                     self.encoder.id_hvs,
+                                     self.encoder.level_hvs)
+            return encode_queries(db, hv)
+        return encode_queries(db, qs)
+
+    def _levels_batch(self, reqs: list[Request], bucket: int) -> np.ndarray:
+        """Assemble the raw (bucket, F) level batch for the fused-e2e
+        route. Pad rows are all-zero (every peak absent) — inert under
+        Eq. 1, and sliced off before FDR like any bucket padding."""
+        out = np.zeros((bucket, self.encoder.num_features), np.int32)
+        for i, r in enumerate(reqs):
+            out[i] = r.query
+        return out
+
     def _encode_batch(self, reqs: list[Request], db: ShardedDatabase,
                       bucket: int, tenant: str) -> np.ndarray:
-        """Assemble the (bucket, width) encoded batch, through the cache."""
+        """Assemble the (bucket, width) encoded batch, through the cache.
+        In e2e mode the cache memoizes *levels -> bank-form row* under a
+        distinct variant tag, so the staged e2e route keeps cache reuse
+        (the fused route skips the cache by design: nothing intermediate
+        exists to memoize)."""
         width = db.data.shape[-1]
         out = np.zeros((bucket, width), dtype=np.dtype(db.data.dtype))
         cache = self.query_cache
         if cache is None:
             qs = jnp.asarray(np.stack([r.query for r in reqs]))
-            out[: len(reqs)] = np.asarray(encode_queries(db, qs))
+            out[: len(reqs)] = np.asarray(self._encode_rows(db, qs))
             return out
-        variant = f"{'packed' if db.packed else 'int8'}:{db.dim}"
+        variant = (f"{'e2e:' if self.encoder is not None else ''}"
+                   f"{'packed' if db.packed else 'int8'}:{db.dim}")
         miss_pos, miss_keys = [], []
         hits = 0
         for i, r in enumerate(reqs):
@@ -803,7 +1265,7 @@ class DBSearchServer:
                 hits += 1
         if miss_pos:
             qs = jnp.asarray(np.stack([reqs[i].query for i in miss_pos]))
-            enc = np.asarray(encode_queries(db, qs))
+            enc = np.asarray(self._encode_rows(db, qs))
             for j, i in enumerate(miss_pos):
                 out[i] = enc[j]
                 cache.insert(miss_keys[j], enc[j].copy())
@@ -813,71 +1275,28 @@ class DBSearchServer:
         return out
 
     def step(self, force: bool = False) -> list[Request]:
-        """Run at most one micro-batch. Flushes when the queue policy says
-        so, or unconditionally (pending > 0) with ``force`` — used to
-        drain on shutdown. Returns the completed requests (with
-        ``result``/``t_done`` filled), [] when nothing flushed."""
+        """One serving-loop iteration; returns the requests completed this
+        step (``result``/``t_done`` filled), [] when nothing finished.
+
+        Flush-sync mode runs at most one micro-batch synchronously when
+        the queue policy says so — or unconditionally (pending > 0) with
+        ``force``, used to drain on shutdown. Continuous mode retires
+        completed slots and refills them from the queue without blocking
+        (``force`` waits out in-flight slots instead)."""
+        if self.scheduler is not None:
+            return self.scheduler.step(block=force)
         if not (self.queue.ready() or (force and len(self.queue))):
             return []
         reqs = self.queue.take_batch()
         if not reqs:
             return []
-        tenant = reqs[0].tenant
-        db = self.banks.get(tenant)  # lazy shard-on-first-use
-        n = len(reqs)
-        bucket = bucket_for(n, self.buckets)
-        self._bucket_counts[bucket] += 1
-        batch = self._encode_batch(reqs, db, bucket, tenant)
-        if self.oms is not None:
-            routed = self._oms_step(reqs, db, batch, n, bucket)
-        else:
-            idx, vals = search_database_encoded(db, jnp.asarray(batch), self.k)
-            routed = fdr_route(db, idx[:n], vals[:n], fdr=self.fdr)
-        t_done = self._clock()
-        for i, r in enumerate(reqs):
-            r.result = QueryResult(
-                indices=routed.indices[i], scores=routed.scores[i],
-                is_target=bool(routed.is_target[i]),
-                accept=bool(routed.accept[i]), match=int(routed.match[i]),
-                has_candidate=(True if routed.valid is None
-                               else bool(routed.valid[i])))
-            r.t_done = t_done
-        self.stats.record_batch(reqs)
-        self.tenant_stats.setdefault(tenant, LatencyStats()).record_batch(reqs)
-        return reqs
-
-    def _oms_step(self, reqs: list[Request], db: ShardedDatabase,
-                  batch: np.ndarray, n: int, bucket: int) -> FDRSearchResult:
-        """OMS search for one flushed batch.
-
-        The real rows are sorted by precursor before the search (queries
-        with nearby masses share kernel tiles, so the per-Q-block tile
-        span — and with it the static tile budget — stays small) and the
-        results unsorted afterwards; FDR routing is order-independent, so
-        it runs on the unsorted batch. Pad rows inherit the highest real
-        precursor for the same reason and are sliced off before routing.
-        """
-        prec = np.asarray([r.precursor for r in reqs], np.float32)
-        order = np.argsort(prec, kind="stable")
-        inv = np.argsort(order, kind="stable")
-        prec_padded = np.concatenate(
-            [prec[order], np.full(bucket - n, prec[order][-1], np.float32)])
-        plan = oms_plan(db, prec_padded, self.oms)
-        batch_sorted = np.concatenate([batch[:n][order], batch[n:]], axis=0)
-        idx, vals = oms_search_encoded(db, jnp.asarray(batch_sorted), plan,
-                                       self.k)
-        idx = np.asarray(idx)[:n][inv]
-        vals = np.asarray(vals)[:n][inv]
-        valid = plan.has_candidate[:n][inv]
-        self._oms_batches += 1
-        self._oms_cand_frac += plan.candidate_fraction
-        self._oms_scan_frac += plan.scanned_fraction
-        self._oms_no_candidate += int((~valid).sum())
-        return fdr_route(db, jnp.asarray(idx), jnp.asarray(vals),
-                         fdr=self.fdr, valid=jnp.asarray(valid))
+        return self.executor.finalize(self.executor.dispatch(reqs))
 
     def run_until_drained(self) -> list[Request]:
-        """Flush until the queue is empty; returns all completed requests."""
+        """Serve until queue and in-flight slots are empty; returns all
+        completed requests."""
+        if self.scheduler is not None:
+            return self.scheduler.drain()
         done: list[Request] = []
         while len(self.queue):
             done.extend(self.step(force=True))
@@ -901,6 +1320,14 @@ class DBSearchServer:
                             if self.query_cache else None)
         s["buckets"] = {int(b): int(c)
                         for b, c in sorted(self._bucket_counts.items())}
+        s["mode"] = "continuous" if self.scheduler is not None else "flush-sync"
+        s["scheduler"] = (None if self.scheduler is None
+                          else self.scheduler.summary())
+        s["e2e"] = (None if self.encoder is None else {
+            "fused": self.fused_e2e,
+            "num_features": self.encoder.num_features,
+            "num_levels": self.encoder.num_levels,
+        })
         if self.oms is not None:
             nb = max(self._oms_batches, 1)
             s["oms"] = {

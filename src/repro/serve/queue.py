@@ -44,7 +44,14 @@ import numpy as np
 
 @dataclasses.dataclass
 class Request:
-    """One in-flight query and its timing record."""
+    """One in-flight query and its timing record.
+
+    ``t_submit`` is stamped at *enqueue* (never at flush), so
+    ``latency_s`` always includes the time spent waiting in the queue;
+    ``t_dispatch`` is stamped when the request leaves the queue for the
+    device (flush-sync flush, or continuous-batching slot admission),
+    splitting the total into ``queue_wait_s`` + ``service_s``.
+    """
 
     rid: int
     query: Any
@@ -53,12 +60,26 @@ class Request:
     t_done: float | None = None
     result: Any = None
     precursor: float | None = None  # query precursor mass (OMS serving mode)
+    t_dispatch: float | None = None  # left the queue for the device
+    cancelled: bool = False          # dropped by the scheduler's cancel()
 
     @property
     def latency_s(self) -> float:
         if self.t_done is None:
             raise ValueError(f"request {self.rid} not completed yet")
         return self.t_done - self.t_submit
+
+    @property
+    def queue_wait_s(self) -> float:
+        if self.t_dispatch is None:
+            raise ValueError(f"request {self.rid} not dispatched yet")
+        return self.t_dispatch - self.t_submit
+
+    @property
+    def service_s(self) -> float:
+        if self.t_done is None or self.t_dispatch is None:
+            raise ValueError(f"request {self.rid} not completed yet")
+        return self.t_done - self.t_dispatch
 
 
 class MicroBatchQueue:
@@ -102,6 +123,19 @@ class MicroBatchQueue:
         self._next_rid += 1
         self._pending.setdefault(tenant, collections.deque()).append(req)
         return req.rid
+
+    def cancel(self, rid: int) -> bool:
+        """Remove a still-pending request from its lane. Returns False when
+        ``rid`` is not pending (already taken by a flush, or unknown) —
+        in-flight cancellation is the scheduler's job."""
+        for tenant, lane in self._pending.items():
+            for r in lane:
+                if r.rid == rid:
+                    lane.remove(r)
+                    if not lane:
+                        del self._pending[tenant]
+                    return True
+        return False
 
     def _oldest(self) -> Request | None:
         heads = [d[0] for d in self._pending.values() if d]
@@ -178,6 +212,8 @@ class LatencyStats:
     def __init__(self, window: int = 8192):
         self._latencies: collections.deque[float] = collections.deque(
             maxlen=window)
+        self._queue_waits: collections.deque[float] = collections.deque(
+            maxlen=window)
         self._batch_sizes: collections.deque[int] = collections.deque(
             maxlen=window)
         self._count = 0
@@ -194,6 +230,8 @@ class LatencyStats:
         for r in requests:
             self._count += 1
             self._latencies.append(r.latency_s)
+            if r.t_dispatch is not None:
+                self._queue_waits.append(r.queue_wait_s)
             if self._t_first is None or r.t_submit < self._t_first:
                 self._t_first = r.t_submit
             if self._t_last is None or r.t_done > self._t_last:
@@ -204,14 +242,18 @@ class LatencyStats:
         return self._count
 
     def summary(self) -> dict:
-        """{count, batches, mean_batch, qps, p50_ms, p95_ms, mean_ms} —
-        count/batches/qps over the full history, the rest over the
-        latest ``window`` requests."""
+        """{count, batches, mean_batch, qps, p50_ms, p95_ms, mean_ms,
+        queue_wait_p50_ms, queue_wait_p95_ms} — count/batches/qps over the
+        full history, the rest over the latest ``window`` requests. The
+        ``queue_wait_*`` split (time before dispatch, part of every
+        latency number) is 0.0 when no request carried ``t_dispatch``."""
         if not self._count:
             return {"count": 0, "batches": 0, "mean_batch": 0.0, "qps": 0.0,
-                    "p50_ms": 0.0, "p95_ms": 0.0, "mean_ms": 0.0}
+                    "p50_ms": 0.0, "p95_ms": 0.0, "mean_ms": 0.0,
+                    "queue_wait_p50_ms": 0.0, "queue_wait_p95_ms": 0.0}
         lat = np.asarray(self._latencies)
         span = max(self._t_last - self._t_first, 1e-9)
+        qw = np.asarray(self._queue_waits) if self._queue_waits else None
         return {
             "count": self._count,
             "batches": self._batches,
@@ -220,4 +262,8 @@ class LatencyStats:
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p95_ms": float(np.percentile(lat, 95) * 1e3),
             "mean_ms": float(lat.mean() * 1e3),
+            "queue_wait_p50_ms": (0.0 if qw is None
+                                  else float(np.percentile(qw, 50) * 1e3)),
+            "queue_wait_p95_ms": (0.0 if qw is None
+                                  else float(np.percentile(qw, 95) * 1e3)),
         }
