@@ -13,10 +13,19 @@ p95, and the p95/p50 tail ratio — hard-floored at <= 4, the PR-7
 acceptance bound that flush-and-wait serving cannot meet under straggler
 traffic) from a third ``serve_db --continuous`` run, plus training
 metrics (per-step time and DCN bytes for the
-hierarchical compressed gradient sync, as ``train/`` rows), and writes
-the result as a repo-root ``BENCH_PR<N>.json``
-(``--pr``, default: newest existing + 1) — the artifact CI uploads so
-every PR leaves a perf data point behind.
+hierarchical compressed gradient sync, as ``train/`` rows), streaming-
+ingestion metrics (``ingest_*``: append latency, search qps on the pure
+base bank / the merged base+delta path / the post-compaction bank, and
+the delta fraction — hard-floored at delta-path qps within 1.5x of
+pure-base, the PR-8 acceptance bound), and clustering-endpoint metrics
+(``cluster_*``: spectra/sec plus the paper's incorrect-clustering
+ratio from a reduced ``repro.launch.serve_cluster`` run), and writes
+the result as a repo-root ``BENCH_PR<N>.json`` — the artifact CI
+uploads so every PR leaves a perf data point behind. The output name
+needs no hand-editing per PR: ``--pr`` wins if given, else the
+``REPRO_BENCH_PR`` env var, else under ``GITHUB_ACTIONS`` the newest
+committed ``BENCH_PR<N>`` is *re-run* (so the previous PR's file stays
+the comparison baseline), else newest + 1.
 
 If a prior ``BENCH_*.json`` exists at the repo root, rows are compared
 against the newest one: a timing row that got more than ``--warn-pct``
@@ -220,6 +229,78 @@ def serving_metrics() -> dict:
     }
 
 
+def ingest_metrics() -> dict:
+    """Streaming-ingestion serving run -> append latency + search qps on
+    the pure base bank, the merged base+delta path, and the compacted
+    bank (same queries, same server; each geometry gets one discarded
+    warm-up pass so the gate times steady-state serving, not jit)."""
+    import time as _time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve import BankRegistry, DBSearchServer
+
+    rng = np.random.default_rng(41)
+    dim, n_q = 64, 256
+
+    def bip(shape):
+        return rng.choice([-1, 1], size=shape).astype(np.int8)
+
+    refs, dec = bip((3072, dim)), bip((1536, dim))
+    d_refs, d_dec = bip((512, dim)), bip((256, dim))
+    queries = bip((n_q, dim))
+    reg = BankRegistry(emulate_shards=2)
+    reg.register("t", jnp.asarray(refs), decoys=jnp.asarray(dec))
+    srv = DBSearchServer(reg, k=4, fdr=0.5, max_batch_size=32,
+                         flush_timeout_s=0.0, buckets=1)
+
+    def qps() -> float:
+        t0 = _time.perf_counter()
+        for q in queries:
+            srv.submit(q, tenant="t")
+        srv.run_until_drained()
+        return n_q / (_time.perf_counter() - t0)
+
+    qps()  # base-geometry warm-up, discarded
+    base_qps = qps()
+    append_ms = []
+    for i in range(8):  # 8 appends of 64+32 rows -> 768 delta rows
+        t0 = _time.perf_counter()
+        srv.append("t", d_refs[i * 64:(i + 1) * 64],
+                   d_dec[i * 32:(i + 1) * 32])
+        append_ms.append((_time.perf_counter() - t0) * 1e3)
+    delta_fraction = reg.delta_fraction("t")
+    qps()  # merged-path warm-up, discarded
+    delta_qps = qps()
+    assert reg.compact("t")
+    qps()  # compacted-geometry warm-up, discarded
+    compacted_qps = qps()
+    append_ms.sort()
+    return {
+        "ingest_append_ms": append_ms[len(append_ms) // 2],
+        "ingest_base_qps": base_qps,
+        "ingest_delta_qps": delta_qps,
+        "ingest_compacted_qps": compacted_qps,
+        "ingest_delta_fraction": delta_fraction,
+    }
+
+
+def cluster_metrics() -> dict:
+    """Reduced clustering-endpoint run -> spectra/sec + the paper's
+    quality ratios (synthetic ground truth)."""
+    from repro.launch import serve_cluster
+    s = serve_cluster.main(["--reduced", "--consolidate-every", "64"])
+    q = s["cluster_quality"]["tenant0"]
+    return {
+        "cluster_spectra_per_sec": s["qps"],
+        "cluster_p95_ms": s["p95_ms"],
+        "cluster_count": q["clusters"],
+        "cluster_clustered_ratio": q["clustered_ratio"],
+        "cluster_incorrect_ratio": q["incorrect_ratio"],
+    }
+
+
 def train_metrics() -> tuple[list[dict], dict]:
     """Reduced hierarchical train runs -> per-step time + DCN bytes.
 
@@ -386,6 +467,13 @@ _SERVING_DIRECTIONS = {
     "continuous_p50_ms": "lower",
     "continuous_p95_ms": "lower",
     "continuous_p95_p50_ratio": "lower",
+    "ingest_append_ms": "lower",
+    "ingest_base_qps": "higher",
+    "ingest_delta_qps": "higher",
+    "ingest_compacted_qps": "higher",
+    "cluster_spectra_per_sec": "higher",
+    "cluster_p95_ms": "lower",
+    "cluster_incorrect_ratio": "lower",
 }
 
 
@@ -448,6 +536,22 @@ def continuous_failures(serving: dict | None) -> list[str]:
     return []
 
 
+def ingest_failures(serving: dict | None) -> list[str]:
+    """Hard failures from the streaming-ingestion floor: the merged
+    base+delta search path must hold qps within 1.5x of the pure-base
+    path (the delta is one small extra unpacked shard, not a rebuild-
+    sized detour). Checked whenever the ingest run ran, baseline or
+    not."""
+    if not serving or "ingest_delta_qps" not in serving:
+        return []
+    base, delta = serving["ingest_base_qps"], serving["ingest_delta_qps"]
+    if delta <= 0 or base / delta > 1.5:
+        return [f"ingest: delta-path search {delta:.1f} q/s is more than "
+                f"1.5x slower than pure-base {base:.1f} q/s "
+                "(merged base+delta search regressed)"]
+    return []
+
+
 def artifact_failures(rows: list[dict]) -> list[str]:
     """Hard failures from correctness-artifact rows — a nonzero
     ``*_mismatches`` count means a kernel stopped matching its oracle.
@@ -464,14 +568,32 @@ def next_pr_number() -> int:
     return max(nums, default=-1) + 1
 
 
+def derive_pr_number(cli_pr: int | None) -> int:
+    """Output PR number without hand-edited workflow pins.
+
+    Precedence: ``--pr`` > ``REPRO_BENCH_PR`` > (under GitHub Actions)
+    the newest committed BENCH_PR number — CI *re-runs* that file, so the
+    previous PR's JSON stays the comparison baseline — > newest + 1 for
+    local runs, which are minting a new data point."""
+    if cli_pr is not None:
+        return cli_pr
+    env = os.environ.get("REPRO_BENCH_PR")
+    if env:
+        return int(env)
+    if os.environ.get("GITHUB_ACTIONS"):
+        return max(next_pr_number() - 1, 0)
+    return next_pr_number()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--output", type=Path, default=None,
                     help="explicit output path (default: BENCH_PR<N>.json "
                          "at the repo root, N from --pr)")
     ap.add_argument("--pr", type=int, default=None,
-                    help="PR number for the default output name "
-                         "(default: newest existing BENCH_PR number + 1)")
+                    help="PR number for the default output name (default: "
+                         "REPRO_BENCH_PR env, else in CI the newest "
+                         "existing BENCH_PR number, else newest + 1)")
     ap.add_argument("--baseline", type=Path, default=None,
                     help="explicit baseline JSON (default: newest prior "
                          "BENCH_*.json at the repo root)")
@@ -489,21 +611,25 @@ def main(argv=None) -> int:
                     help="skip the reduced hierarchical train runs")
     args = ap.parse_args(argv)
     if args.output is None:
-        pr = args.pr if args.pr is not None else next_pr_number()
-        args.output = REPO / f"BENCH_PR{pr}.json"
+        args.output = REPO / f"BENCH_PR{derive_pr_number(args.pr)}.json"
 
     rows = run_suites()
     train = None
     if not args.skip_train:
         train_rows, train = train_metrics()
         rows += train_rows
+    serving = None
+    if not args.skip_serving:
+        serving = serving_metrics()
+        serving.update(ingest_metrics())
+        serving.update(cluster_metrics())
     result = {
         "schema": 1,
         "source": "scripts/bench_ci.py",
         "quick": True,
         "canary_us": machine_canary(),
         "rows": rows,
-        "serving": None if args.skip_serving else serving_metrics(),
+        "serving": serving,
         "train": train,
     }
     args.output.write_text(json.dumps(result, indent=2) + "\n")
@@ -515,14 +641,19 @@ def main(argv=None) -> int:
          f"{result['serving']['oms_scanned_fraction']:.0%} of the bank, "
          f"continuous {result['serving']['continuous_queries_per_sec']:.1f} "
          "q/s p95/p50 "
-         f"{result['serving']['continuous_p95_p50_ratio']:.2f}")
+         f"{result['serving']['continuous_p95_p50_ratio']:.2f}, "
+         f"ingest delta-path {result['serving']['ingest_delta_qps']:.1f} "
+         f"vs base {result['serving']['ingest_base_qps']:.1f} q/s, "
+         f"cluster {result['serving']['cluster_spectra_per_sec']:.1f} "
+         "spectra/s")
           + ("" if args.skip_train else
          f", train DCN {max(v['reduction_x'] for k, v in train.items() if k != 'none'):.1f}x compressed")
           + ")")
 
     hard_failures = (artifact_failures(rows) + train_failures(train)
                      + oms_failures(result["serving"])
-                     + continuous_failures(result["serving"]))
+                     + continuous_failures(result["serving"])
+                     + ingest_failures(result["serving"]))
 
     base_path = args.baseline or find_baseline(args.output)
     if base_path is None:

@@ -62,6 +62,26 @@ def pairwise_distances(hvs: jax.Array, dim: int | None = None) -> jax.Array:
     return dist * (1.0 - jnp.eye(n, dtype=jnp.float32))
 
 
+def cross_distances(a: jax.Array, b: jax.Array,
+                    dim: int | None = None) -> jax.Array:
+    """Hamming distances between two *different* HV sets — (Na, Nb).
+
+    The cross-set twin of :func:`pairwise_distances` (same packed-popcount
+    fast path and (D - <a,b>)/2 map, no diagonal zeroing since a[i] and
+    b[i] are unrelated points). This is the streaming-clustering inner
+    step: a batch of query HVs against the current centroid bank.
+    """
+    d = dim if dim is not None else a.shape[-1]
+    if a.dtype == jnp.uint32:
+        from repro.kernels.hamming_pop import hamming_pop_pallas
+        return (d - hamming_pop_pallas(a, b, dim=d)).astype(jnp.float32)
+    dots = jnp.einsum(
+        "id,jd->ij", a.astype(jnp.int32), b.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return (d - dots).astype(jnp.float32) * 0.5
+
+
 @partial(jax.jit, static_argnames=())
 def complete_linkage(dist: jax.Array, threshold: jax.Array | float) -> ClusteringResult:
     """Complete-linkage clustering of a symmetric (N, N) distance matrix.

@@ -106,6 +106,16 @@ def main(argv=None):
                     help="submit raw quantized spectra and run the fused "
                          "encode->pack->search kernel per shard (one device "
                          "dispatch; the query HV never touches HBM)")
+    ap.add_argument("--append", type=float, default=0.0, metavar="FRAC",
+                    help="hold this fraction of every bank out of the "
+                         "initial registration and stream it back in with "
+                         "server.append() halfway through the run — "
+                         "searches after the append take the exact merged "
+                         "base+delta path (0 disables)")
+    ap.add_argument("--compact-threshold", type=float, default=None,
+                    help="fold a tenant's delta into its packed base when "
+                         "the delta exceeds this fraction of total rows "
+                         "(default: never compact)")
     args = ap.parse_args(argv)
 
     if args.tenants < 1:
@@ -143,7 +153,10 @@ def main(argv=None):
                if args.oms else None)
     mod_range = (60.0, 0.75 * args.open_tol) if args.oms else (0.0, 0.0)
 
+    if not 0.0 <= args.append < 1.0:
+        raise SystemExit("--append must be in [0, 1)")
     datasets, query_pools, precursor_pools = {}, {}, {}
+    holdouts = {}  # tenant -> (refs, decoys, precursor) appended mid-run
     for t in range(args.tenants):
         tenant = f"tenant{t}"
         ms = SyntheticMSConfig(num_identities=n_id,
@@ -153,9 +166,20 @@ def main(argv=None):
         ds = generate_dataset(ms)
         refs_hv = encode_and_pack(ds.spectra, cfg)
         decoys_hv = encode_and_pack(make_decoys(ds.spectra), cfg)
+        prec = np.asarray(ds.precursor) if args.oms else None
+        n_refs = int(refs_hv.shape[0])
+        keep = n_refs - int(args.append * n_refs)
+        if args.append and keep < n_refs:
+            # hold out a *suffix* so append restores the original row
+            # order — the identity arrays keep indexing matches directly
+            holdouts[tenant] = (
+                np.asarray(refs_hv[keep:], np.int8),
+                np.asarray(decoys_hv[keep:], np.int8),
+                None if prec is None else prec[keep:].astype(np.float32))
+            refs_hv, decoys_hv = refs_hv[:keep], decoys_hv[:keep]
+            prec = None if prec is None else prec[:keep]
         registry.register(tenant, refs_hv, decoys=decoys_hv, pin=t == 0,
-                          precursor=(np.asarray(ds.precursor)
-                                     if args.oms else None))
+                          precursor=prec)
         qs = generate_query_set(ds, ms, num_queries=n_q,
                                 seed=args.seed + 31 * t + 1)
         datasets[tenant] = (np.asarray(ds.identity), np.asarray(qs.identity))
@@ -185,7 +209,8 @@ def main(argv=None):
         cache_bytes=int(args.cache_mb * 2**20) or None,
         buckets=args.buckets, fairness_cap=args.fairness_cap, oms=oms_cfg,
         encoder=encoder, fused_e2e=args.fused_e2e,
-        continuous=args.continuous, num_slots=args.num_slots)
+        continuous=args.continuous, num_slots=args.num_slots,
+        compact_threshold=args.compact_threshold)
 
     # warm the jit cache on the hot tenant (search + FDR routing) for the
     # largest bucket so latency numbers measure serving, not compile; cold
@@ -229,6 +254,16 @@ def main(argv=None):
     done = []
     sent = 0
     while sent < total:
+        if holdouts and sent >= total // 2:
+            # stream the held-out rows back in: every later flush takes
+            # the exact merged base+delta path (until compaction, if on)
+            t0 = time.perf_counter()
+            for tenant, (h_refs, h_dec, h_prec) in holdouts.items():
+                server.append(tenant, h_refs, h_dec, precursor=h_prec)
+            dt = time.perf_counter() - t0
+            print(f"appended {sum(h[0].shape[0] + h[1].shape[0] for h in holdouts.values())} "
+                  f"rows across {len(holdouts)} tenant(s) in {dt * 1e3:.1f} ms")
+            holdouts = {}
         burst = int(rng.integers(1, max_batch + 1))
         for _ in range(min(burst, total - sent)):
             tenant = tenant_names[int(rng.choice(args.tenants, p=probs))]
@@ -286,6 +321,11 @@ def main(argv=None):
     b = s["banks"]
     print(f"banks: {b['built']}/{b['registered']} built ({b['builds']} "
           f"builds, {b['evictions']} evictions, {b['pinned']} pinned)")
+    if args.append:
+        ing = s["ingest"]
+        print(f"ingest: {b['appends']} appends, {b['compactions']} "
+              f"compactions, {b['delta_rows']} delta rows pending "
+              f"(compact threshold {ing['compact_threshold']})")
     for tenant in sorted(s["tenants"]):
         ts = s["tenants"][tenant]
         print(f"  {tenant}: {ts['count']} reqs, p50 {ts['p50_ms']:.2f} ms, "

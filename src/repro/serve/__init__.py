@@ -28,9 +28,31 @@ admission — the tail-latency mode) share one code path; with a
 ``QueryEncoder`` the server accepts raw quantized spectra and runs the
 fused encode->pack->search kernel end to end. ``repro.launch.serve_db``
 is the runnable entry point.
+
+The server is a live read/write system: ``BankRegistry.append`` streams
+new refs into small unpacked per-tenant delta banks (``delta.DeltaBank``)
+with exact merged base+delta search — provably bit-identical to a
+from-scratch rebuild, OMS included — and background ``compact`` folds
+deltas into the packed base past a threshold. The paper's other
+full-stack task, spectral clustering, is a second serving endpoint
+(``clustering.StreamingClusterer``) sharing the queue/scheduler as its
+own request kind; ``repro.launch.serve_cluster`` is its entry point.
 """
 
 from repro.serve.cache import BankRegistry, QueryHVCache
+from repro.serve.clustering import (
+    ClusterAssignment,
+    ClusteringConfig,
+    StreamingClusterer,
+)
+from repro.serve.delta import (
+    DeltaBank,
+    MergedOMSPlan,
+    merged_layout,
+    merged_oms_plan,
+    merged_oms_search_encoded,
+    merged_search_encoded,
+)
 from repro.serve.db_search import (
     DBSearchServer,
     QueryEncoder,
@@ -63,9 +85,13 @@ from repro.serve.queue import LatencyStats, MicroBatchQueue, Request
 
 __all__ = [
     "BankRegistry",
+    "ClusterAssignment",
+    "ClusteringConfig",
     "ContinuousScheduler",
     "DBSearchServer",
+    "DeltaBank",
     "LatencyStats",
+    "MergedOMSPlan",
     "MicroBatchQueue",
     "OMSConfig",
     "OMSPlan",
@@ -76,10 +102,15 @@ __all__ = [
     "SearchExecutor",
     "ShardedDatabase",
     "Slot",
+    "StreamingClusterer",
     "bucket_for",
     "build_precursor_index",
     "encode_queries",
     "make_buckets",
+    "merged_layout",
+    "merged_oms_plan",
+    "merged_oms_search_encoded",
+    "merged_search_encoded",
     "oms_plan",
     "oms_search",
     "oms_search_encoded",

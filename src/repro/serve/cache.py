@@ -167,6 +167,16 @@ class BankRegistry:
     ``get`` for that tenant — and rebuilt transparently if it was evicted
     in between. At most ``max_banks`` built banks are held; beyond that
     the least-recently-used *unpinned* bank is dropped.
+
+    **Streaming ingestion**: ``append`` lands new refs/decoys in a small
+    unpacked per-tenant :class:`~repro.serve.delta.DeltaBank`; callers
+    that search via ``get_with_delta`` get an exact merged top-k over
+    base + delta (bit-identical to re-registering the concatenated
+    arrays — see :mod:`repro.serve.delta`). ``compact`` folds the delta
+    back into the bit-packed base: the merged bank is built *before* the
+    spec/built swap, so a failed build leaves the registry untouched, and
+    invalidation is scoped to the compacted tenant (every other tenant's
+    built bank and the content-keyed query-HV cache are unaffected).
     """
 
     def __init__(self, *, mesh=None, axis: str = "model",
@@ -182,9 +192,12 @@ class BankRegistry:
         self.fused = fused
         self._specs: dict[str, _BankSpec] = {}
         self._built: collections.OrderedDict[str, Any] = collections.OrderedDict()
+        self._deltas: dict[str, Any] = {}  # tenant -> DeltaBank
         self.builds = 0
         self.hits = 0
         self.evictions = 0
+        self.appends = 0
+        self.compactions = 0
 
     def __len__(self) -> int:
         return len(self._specs)
@@ -206,6 +219,7 @@ class BankRegistry:
             refs=refs, decoys=decoys, dim=int(refs.shape[-1]), pinned=pin,
             precursor=precursor, decoy_precursor=decoy_precursor)
         self._built.pop(tenant, None)
+        self._deltas.pop(tenant, None)
 
     def adopt(self, tenant: str, db, *, pin: bool = True) -> None:
         """Install an already-built bank (no spec; cannot be rebuilt if
@@ -215,6 +229,7 @@ class BankRegistry:
             refs=None, decoys=None, dim=db.dim, pinned=pin)
         self._built[tenant] = db
         self._built.move_to_end(tenant)
+        self._deltas.pop(tenant, None)
 
     def dim(self, tenant: str) -> int:
         """The tenant's HV dimension — available without building the bank."""
@@ -253,6 +268,114 @@ class BankRegistry:
         self._evict_cold()
         return db
 
+    # -- streaming ingestion (delta banks + compaction) --------------------
+
+    def append(self, tenant: str, refs, decoys=None, *, precursor=None,
+               decoy_precursor=None) -> int:
+        """Land new refs (+ optional decoys) in the tenant's delta bank.
+
+        O(delta) per call — the bit-packed base is untouched; search via
+        :meth:`get_with_delta` merges exactly. Returns the delta's total
+        row count. Adopted (spec-less) banks cannot accept appends: a
+        later compaction could not rebuild them.
+        """
+        spec = self._specs[tenant]  # KeyError for unknown tenants
+        if spec.refs is None:
+            raise ValueError(
+                f"tenant {tenant!r} bank was adopted pre-built; appends "
+                f"need the raw spec so compaction can rebuild — use "
+                f"register() instead of adopt()")
+        delta = self._deltas.get(tenant)
+        if delta is None:
+            from repro.serve.delta import DeltaBank
+            delta = DeltaBank(spec.dim, oms=spec.precursor is not None)
+            self._deltas[tenant] = delta
+        rows = delta.append(refs, decoys, precursor=precursor,
+                            decoy_precursor=decoy_precursor)
+        self.appends += 1
+        return rows
+
+    def delta(self, tenant: str):
+        """The tenant's DeltaBank, or None when it has no appended rows."""
+        d = self._deltas.get(tenant)
+        return d if d is not None and d.num_rows else None
+
+    def get_with_delta(self, tenant: str):
+        """(base bank, delta-or-None) — the pair a merged search needs."""
+        return self.get(tenant), self.delta(tenant)
+
+    def tenants_with_delta(self) -> list[str]:
+        return [t for t, d in self._deltas.items() if d.num_rows]
+
+    def _base_rows(self, tenant: str) -> int:
+        spec = self._specs[tenant]
+        if spec.refs is None:
+            db = self._built.get(tenant)
+            return db.num_rows if db is not None else 0
+        rows = int(np.asarray(spec.refs).shape[0])
+        if spec.decoys is not None:
+            rows += int(np.asarray(spec.decoys).shape[0])
+        return rows
+
+    def delta_fraction(self, tenant: str) -> float:
+        """Appended rows / total rows — the compaction trigger metric."""
+        d = self.delta(tenant)
+        if d is None:
+            return 0.0
+        total = self._base_rows(tenant) + d.num_rows
+        return d.num_rows / total if total else 0.0
+
+    def compact(self, tenant: str) -> bool:
+        """Fold the tenant's delta into its bit-packed base.
+
+        Builds the merged bank from the concatenated spec + delta arrays
+        *first*, then atomically swaps spec/built and drops the delta —
+        a build failure leaves the registry exactly as it was, and other
+        tenants' built banks are never touched. Returns False when there
+        is nothing to compact.
+        """
+        d = self.delta(tenant)
+        if d is None:
+            return False
+        spec = self._specs[tenant]
+        refs = np.concatenate([np.asarray(spec.refs, np.int8), d.refs])
+        decoys = None
+        old_dec = (np.asarray(spec.decoys, np.int8)
+                   if spec.decoys is not None
+                   else np.zeros((0, spec.dim), np.int8))
+        if old_dec.shape[0] or d.num_decoys:
+            decoys = np.concatenate([old_dec, d.decoys])
+        precursor = decoy_precursor = None
+        if spec.precursor is not None:
+            precursor = np.concatenate(
+                [np.asarray(spec.precursor, np.float32), d.precursor])
+            if decoys is not None:
+                base_dprec = (spec.decoy_precursor
+                              if spec.decoy_precursor is not None
+                              else spec.precursor)
+                base_dprec = np.asarray(base_dprec,
+                                        np.float32)[:old_dec.shape[0]]
+                decoy_precursor = np.concatenate(
+                    [base_dprec, d.decoy_precursor])
+        from repro.serve.db_search import shard_database
+        db = shard_database(refs, decoys=decoys, mesh=self.mesh,
+                            axis=self.axis, pack=self.pack,
+                            emulate_shards=self.emulate_shards,
+                            fused=self.fused, precursor=precursor,
+                            decoy_precursor=decoy_precursor)
+        self.builds += 1
+        # atomic swap: spec + built bank + delta change together, and only
+        # for this tenant
+        self._specs[tenant] = _BankSpec(
+            refs=refs, decoys=decoys, dim=spec.dim, pinned=spec.pinned,
+            precursor=precursor, decoy_precursor=decoy_precursor)
+        self._built[tenant] = db
+        self._built.move_to_end(tenant)
+        del self._deltas[tenant]
+        self.compactions += 1
+        self._evict_cold()
+        return True
+
     def _evict_cold(self) -> None:
         if self.max_banks is None:
             return
@@ -272,4 +395,8 @@ class BankRegistry:
             "builds": self.builds,
             "hits": self.hits,
             "evictions": self.evictions,
+            "appends": self.appends,
+            "compactions": self.compactions,
+            "delta_rows": sum(d.num_rows for d in self._deltas.values()),
+            "tenants_with_delta": len(self.tenants_with_delta()),
         }

@@ -1,0 +1,298 @@
+"""Streaming spectral clustering as a serving endpoint (SpecPCM §III.C).
+
+The paper's *other* full-stack task next to DB search: incoming spectra
+are clustered online instead of matched against a reference bank. This
+module gives it the same serving surface — per-tenant state behind
+:class:`~repro.serve.db_search.DBSearchServer`'s queue/scheduler, with
+the heavy compute (a query batch against the centroid bank) on the
+device and the tiny sequential decision loop on the host:
+
+  * **assign-or-spawn**: each spectrum HV scores against the current
+    centroid snapshot via :func:`repro.core.hd.clustering.cross_distances`
+    (the packed XOR+popcount kernel when ``D % 32 == 0`` — the in-array
+    distance step of the paper's pipeline); a spectrum joins the nearest
+    cluster within ``threshold`` (ties to the lowest-numbered cluster,
+    matching ``complete_linkage``'s canonical-min labeling), else spawns
+    a new one. Centroids are bipolar majority bundles — the running
+    element sum with a sign readout, the HD analogue of a mean.
+  * **periodic re-consolidation**: greedy streaming can split one true
+    cluster across arrival order; every ``consolidate_every`` spectra
+    the centroid bank itself is re-clustered with the paper's
+    :func:`~repro.core.hd.clustering.complete_linkage` and merged
+    clusters fold their accumulators together. Old cluster ids stay
+    resolvable through :meth:`StreamingClusterer.resolve`.
+
+Batching semantics (what makes replay deterministic): distances for a
+batch are computed against the snapshot taken at dispatch; the host
+decision loop is sequential *within* the batch — a spectrum that spawns
+a cluster is immediately assignable to the rest of its batch (exact
+host-side distances, same (D - <q,c>)/2 map the device uses). In
+flush-sync serving, batches finalize in submit order, so replaying a
+stream through any batch partition yields the same final partition of
+points whenever assignments are unambiguous (well-separated clusters);
+the continuous scheduler may interleave *different tenants'* batches
+freely — per-tenant state makes that safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hd.clustering import (
+    complete_linkage,
+    cross_distances,
+    pairwise_distances,
+)
+from repro.core.hd.similarity import bitpack_bipolar
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusteringConfig:
+    """Per-server clustering policy.
+
+    threshold: assign a spectrum to its nearest centroid when the Hamming
+      distance is <= this, else spawn a new cluster.
+    link_threshold: complete-linkage threshold for periodic consolidation
+      (defaults to ``threshold``).
+    consolidate_every: re-consolidate after this many assigned spectra
+      per tenant; 0 disables (pure greedy streaming).
+    pack: bit-pack centroids for the popcount distance kernel — True /
+      False / "auto" (pack when D % 32 == 0), like ``shard_database``.
+    """
+
+    dim: int
+    threshold: float
+    link_threshold: float | None = None
+    consolidate_every: int = 0
+    pack: bool | str = "auto"
+
+    @property
+    def packed(self) -> bool:
+        if self.pack == "auto":
+            return self.dim % 32 == 0
+        return bool(self.pack)
+
+    @property
+    def merge_threshold(self) -> float:
+        return (self.threshold if self.link_threshold is None
+                else self.link_threshold)
+
+
+@dataclasses.dataclass
+class ClusterAssignment:
+    """Per-request clustering result (the endpoint's ``QueryResult``)."""
+
+    cluster_id: int    # public id (stable across consolidations via resolve)
+    spawned: bool      # this spectrum started a new cluster
+    distance: float    # Hamming distance to the assigned centroid
+                       # (0.0 for a spawn: a cluster's founder is its centroid)
+
+
+class StreamingClusterer:
+    """Online assign-or-spawn cluster state for one tenant.
+
+    Host state is the integer accumulator (sum of member bipolar HVs) per
+    cluster plus its sign snapshot; the device holds a (possibly packed)
+    copy of the snapshot, rebuilt lazily after batches mutate it and
+    row-padded to a small power-of-two ladder so repeated batches share
+    jit signatures. Public cluster ids are allocated in spawn order and
+    survive consolidation through a remap chain.
+    """
+
+    def __init__(self, cfg: ClusteringConfig):
+        self.cfg = cfg
+        self._acc = np.zeros((0, cfg.dim), np.int32)
+        self._counts = np.zeros((0,), np.int64)
+        self._cent = np.zeros((0, cfg.dim), np.int8)  # sign(_acc), 0 -> +1
+        self._ids: list[int] = []                     # public id per row
+        self._next_id = 0
+        self._remap: dict[int, int] = {}              # merged-away -> target
+        self._cent_dev = None                         # (array, rows_covered)
+        self._since_consol = 0
+        self.struct_version = 0   # bumped when consolidation moves rows
+        self.assigned = 0
+        self.spawned = 0
+        self.consolidations = 0
+        self.merges = 0
+
+    @property
+    def num_clusters(self) -> int:
+        return len(self._ids)
+
+    # -- device side (called at dispatch) ---------------------------------
+
+    def snapshot_distances(self, hvs: np.ndarray):
+        """Launch (Q, C) Hamming distances of a bucket-padded int8 batch
+        against the current centroid snapshot; None when no clusters
+        exist yet (the whole batch spawns). The returned array is an
+        unrealized device value — the executor polls it like any search
+        handle."""
+        c = self.num_clusters
+        if c == 0:
+            return None
+        if self._cent_dev is None or self._cent_dev[1] != c:
+            # pad centroid rows to the next power of two (>= 8) so the
+            # distance jit signature changes O(log C) times, not per spawn
+            rows = 8
+            while rows < c:
+                rows *= 2
+            bank = np.zeros((rows, self.cfg.dim), np.int8)
+            bank[:c] = self._cent
+            bank_dev = (bitpack_bipolar(jnp.asarray(bank))
+                        if self.cfg.packed else jnp.asarray(bank))
+            self._cent_dev = (bank_dev, c, rows)
+        bank_dev = self._cent_dev[0]
+        q = jnp.asarray(hvs, jnp.int8)
+        if self.cfg.packed:
+            q = bitpack_bipolar(q)
+        return cross_distances(q, bank_dev, dim=self.cfg.dim)
+
+    # -- host side (called at finalize) -----------------------------------
+
+    def _host_distance(self, hv: np.ndarray, row: int) -> float:
+        # same exact map as the device path: dist = (D - <q, c>) / 2
+        dot = int(hv.astype(np.int32) @ self._cent[row].astype(np.int32))
+        return (self.cfg.dim - dot) / 2.0
+
+    def assign_batch(self, hvs: np.ndarray, dists: np.ndarray | None,
+                     c0: int, struct_version: int | None = None
+                     ) -> list[ClusterAssignment]:
+        """Sequentially assign-or-spawn one batch.
+
+        dists: realized (Q, >=c0) snapshot distances (None when c0 == 0);
+        c0 is the cluster count the snapshot covered at dispatch. Rows
+        spawned after the snapshot — by earlier requests in this batch,
+        or by another batch that finalized in between — are scored
+        host-side with the identical distance map, so results don't
+        depend on where the batch boundary fell. If a consolidation
+        restructured the rows since dispatch (detected via
+        ``struct_version``), the snapshot columns no longer line up and
+        the whole batch is scored host-side instead.
+        """
+        if (struct_version is not None
+                and struct_version != self.struct_version):
+            dists, c0 = None, 0
+        out: list[ClusterAssignment] = []
+        touched: set[int] = set()
+        for i in range(hvs.shape[0]):
+            hv = hvs[i]
+            best_row, best_d = -1, np.inf
+            c_snap = min(c0, self.num_clusters)
+            if dists is not None and c_snap:
+                row = int(np.argmin(dists[i, :c_snap]))  # ties -> lowest row
+                best_row, best_d = row, float(dists[i, row])
+            for row in range(c_snap, self.num_clusters):
+                d = self._host_distance(hv, row)
+                if d < best_d:  # strict: ties keep the lower row
+                    best_row, best_d = row, d
+            if best_row >= 0 and best_d <= self.cfg.threshold:
+                self._acc[best_row] += hv.astype(np.int32)
+                self._counts[best_row] += 1
+                touched.add(best_row)
+                out.append(ClusterAssignment(
+                    cluster_id=self._ids[best_row], spawned=False,
+                    distance=best_d))
+            else:
+                cid = self._spawn(hv)
+                out.append(ClusterAssignment(
+                    cluster_id=cid, spawned=True, distance=0.0))
+        for row in sorted(touched):
+            self._refresh_row(row)
+        if touched:
+            self._cent_dev = None
+        self.assigned += hvs.shape[0]
+        self._since_consol += hvs.shape[0]
+        self.maybe_consolidate()
+        return out
+
+    def _spawn(self, hv: np.ndarray) -> int:
+        self._acc = np.concatenate([self._acc,
+                                    hv.astype(np.int32)[None, :]])
+        self._counts = np.concatenate([self._counts,
+                                       np.ones((1,), np.int64)])
+        self._cent = np.concatenate([self._cent,
+                                     hv.astype(np.int8)[None, :]])
+        cid = self._next_id
+        self._next_id += 1
+        self._ids.append(cid)
+        self._cent_dev = None
+        self.spawned += 1
+        return cid
+
+    def _refresh_row(self, row: int) -> None:
+        # bipolar majority bundle: sign of the element sum, zeros -> +1
+        self._cent[row] = np.where(self._acc[row] >= 0, 1, -1).astype(np.int8)
+
+    def maybe_consolidate(self) -> bool:
+        """Re-cluster the centroid bank with complete linkage when due;
+        merged clusters sum their accumulators and the dropped ids remap
+        to the survivor (canonical = lowest-numbered row, i.e. oldest)."""
+        cfg = self.cfg
+        if (not cfg.consolidate_every
+                or self._since_consol < cfg.consolidate_every):
+            return False
+        self._since_consol = 0
+        if self.num_clusters < 2:
+            return False
+        cent = jnp.asarray(self._cent)
+        if cfg.packed:
+            cent = bitpack_bipolar(cent)
+        dist = pairwise_distances(cent, dim=cfg.dim)
+        res = complete_linkage(dist, cfg.merge_threshold)
+        labels = np.asarray(res.labels)
+        self.consolidations += 1
+        if int(res.num_merges) == 0:
+            return False
+        keep = sorted(set(int(x) for x in labels))
+        row_of = {lab: i for i, lab in enumerate(keep)}
+        acc = np.zeros((len(keep), cfg.dim), np.int32)
+        counts = np.zeros((len(keep),), np.int64)
+        for old_row, lab in enumerate(labels):
+            new_row = row_of[int(lab)]
+            acc[new_row] += self._acc[old_row]
+            counts[new_row] += self._counts[old_row]
+            if old_row != int(lab):
+                self._remap[self._ids[old_row]] = self._ids[int(lab)]
+                self.merges += 1
+        self._acc, self._counts = acc, counts
+        self._ids = [self._ids[lab] for lab in keep]
+        self._cent = np.zeros((len(keep), cfg.dim), np.int8)
+        for row in range(len(keep)):
+            self._refresh_row(row)
+        self._cent_dev = None
+        self.struct_version += 1
+        return True
+
+    def resolve(self, cluster_id: int) -> int:
+        """Follow the merge chain: the current canonical id for a cluster
+        id handed out earlier (identity for live clusters)."""
+        seen = set()
+        while cluster_id in self._remap and cluster_id not in seen:
+            seen.add(cluster_id)
+            cluster_id = self._remap[cluster_id]
+        return cluster_id
+
+    def centroid(self, cluster_id: int) -> np.ndarray:
+        """The (D,) int8 centroid snapshot for a (resolved) cluster id."""
+        row = self._ids.index(self.resolve(cluster_id))
+        return self._cent[row].copy()
+
+    def labels_for(self, assignments: list[ClusterAssignment]) -> np.ndarray:
+        """Resolved cluster id per assignment — the replayed-stream view
+        comparable against a batch ``complete_linkage`` partition."""
+        return np.asarray([self.resolve(a.cluster_id) for a in assignments],
+                          np.int64)
+
+    def summary(self) -> dict:
+        return {
+            "clusters": self.num_clusters,
+            "assigned": self.assigned,
+            "spawned": self.spawned,
+            "consolidations": self.consolidations,
+            "merges": self.merges,
+            "threshold": self.cfg.threshold,
+            "packed": self.cfg.packed,
+        }

@@ -83,6 +83,7 @@ from repro.core.hd.similarity import (
     topk_search,
 )
 from repro.serve.cache import BankRegistry, QueryHVCache
+from repro.serve.clustering import ClusteringConfig, StreamingClusterer
 from repro.serve.oms import (
     OMSConfig,
     OMSPlan,
@@ -511,6 +512,19 @@ def oms_search_encoded(db: ShardedDatabase, q_enc: jax.Array, plan: OMSPlan,
     the oracle's ascending masked rows before translation. Returned
     indices are *original* bank rows (decoys still ``< db.num_decoys``).
     """
+    starts = jnp.asarray(plan.starts, jnp.int32)     # (B, Q)
+    ends = starts + jnp.asarray(plan.lens, jnp.int32)
+    idx, vals = _oms_search_inner(db, q_enc, plan, k)
+    return _oms_finish(db, idx, vals, starts, ends)
+
+
+def _oms_search_inner(db: ShardedDatabase, q_enc: jax.Array, plan: OMSPlan,
+                      k: int) -> tuple[jax.Array, jax.Array]:
+    """The routed banded search *before* the shared tail: returns top-k
+    (sorted-layout idx, vals) with kernel overflow fillers still in place
+    (sentinel-valued). Callers — :func:`oms_search_encoded` and the
+    base+delta merge in :mod:`repro.serve.delta` — run overflow
+    canonicalization + perm translation against *their* index."""
     if db.oms is None:
         raise ValueError("bank was built without precursor=")
     _check_k(db, k)
@@ -541,8 +555,7 @@ def oms_search_encoded(db: ShardedDatabase, q_enc: jax.Array, plan: OMSPlan,
                              db.dim, db.packed, k, batch_sharded, db.fused,
                              int(starts.shape[0]), nt)
         idx, vals = fn(q_enc, starts, ends, db.data)
-
-    return _oms_finish(db, idx, vals, starts, ends)
+    return idx, vals
 
 
 def _oms_finish(db: ShardedDatabase, idx, vals, starts, ends):
@@ -865,8 +878,8 @@ class FDRSearchResult:
 
 
 def fdr_route(db: ShardedDatabase, indices: jax.Array, scores: jax.Array,
-              fdr: float = 0.01, valid: jax.Array | None = None
-              ) -> FDRSearchResult:
+              fdr: float = 0.01, valid: jax.Array | None = None,
+              num_decoys: int | None = None) -> FDRSearchResult:
     """Target-decoy competition + FDR filter over merged top-k results.
 
     Only rank 0 decides the competition: because decoys precede targets in
@@ -880,15 +893,20 @@ def fdr_route(db: ShardedDatabase, indices: jax.Array, scores: jax.Array,
     candidate window; they are excluded from the target/decoy counts
     (mirroring ``run_db_search``: an unmatchable query is not a decoy
     win), never accepted, and reported with ``is_target=False``.
+
+    num_decoys: override of ``db.num_decoys`` for results whose row space
+    is wider than ``db`` — the base+delta merged search
+    (:mod:`repro.serve.delta`), where the decoy block spans both sides.
     """
+    nd = db.num_decoys if num_decoys is None else int(num_decoys)
     top_idx = indices[:, 0]
     top_val = scores[:, 0]
-    is_target = top_idx >= db.num_decoys
+    is_target = top_idx >= nd
     accept = fdr_filter(top_val.astype(jnp.float32), is_target, fdr=fdr,
                         valid=valid)
     if valid is not None:
         is_target = is_target & valid
-    match = jnp.where(accept & is_target, top_idx - db.num_decoys, -1)
+    match = jnp.where(accept & is_target, top_idx - nd, -1)
     return FDRSearchResult(
         indices=np.asarray(indices), scores=np.asarray(scores),
         is_target=np.asarray(is_target), accept=np.asarray(accept),
@@ -968,6 +986,24 @@ class BatchHandle:
     valid: np.ndarray | None = None  # OMS has_candidate, submit order
     inv: np.ndarray | None = None    # OMS unsort permutation
     oms: bool = False
+    num_decoys: int | None = None    # merged-row-space override (delta path)
+
+
+@dataclasses.dataclass
+class ClusterBatchHandle:
+    """In-flight clustering batch (the second handle type behind the
+    scheduler seam — the scheduler treats handles opaquely, so the
+    clustering endpoint needed no scheduler change). ``dists`` is the
+    unrealized snapshot-distance launch; the sequential assign-or-spawn
+    decision runs host-side at finalize."""
+
+    reqs: list[Request]
+    tenant: str
+    n: int                       # real rows (the rest is bucket padding)
+    hvs: np.ndarray              # (bucket, D) int8 batch
+    dists: jax.Array | None     # (bucket, >=c0) device distances, or None
+    c0: int                      # clusters covered by the snapshot
+    struct_version: int          # clusterer structure at dispatch
 
 
 class SearchExecutor:
@@ -1004,12 +1040,28 @@ class SearchExecutor:
         for r in reqs:
             r.t_dispatch = t
         tenant = reqs[0].tenant
-        db = srv.banks.get(tenant)  # lazy shard-on-first-use
+        if reqs[0].kind == "cluster":
+            return self._dispatch_cluster(reqs, tenant)
+        db, delta = srv.banks.get_with_delta(tenant)  # lazy shard-on-use
         n = len(reqs)
         bucket = bucket_for(n, srv.buckets)
         srv._bucket_counts[bucket] += 1
         if srv.oms is not None:
-            return self._dispatch_oms(reqs, db, n, bucket, tenant)
+            return self._dispatch_oms(reqs, db, delta, n, bucket, tenant)
+        if delta is not None:
+            # merged base+delta search (bit-identical to a rebuilt bank).
+            # The fused-e2e route has no encoded intermediate to hand the
+            # delta, so delta batches take the staged pipeline — which is
+            # bit-identical to fused by the PR 7 invariant.
+            from repro.serve.delta import merged_search_encoded
+            q_enc = jax.device_put(
+                srv._encode_batch(reqs, db, bucket, tenant))
+            q_raw = jax.device_put(srv._raw_batch(reqs, bucket))
+            idx, vals = merged_search_encoded(db, delta, q_enc, q_raw,
+                                              srv.k)
+            return BatchHandle(
+                reqs=reqs, tenant=tenant, db=db, n=n, idx=idx, vals=vals,
+                num_decoys=db.num_decoys + delta.num_decoys)
         if srv.encoder is not None and srv.fused_e2e:
             batch = jax.device_put(srv._levels_batch(reqs, bucket))
             idx, vals = search_database_levels(db, srv.encoder, batch,
@@ -1022,26 +1074,46 @@ class SearchExecutor:
                            vals=vals)
 
     def _dispatch_oms(self, reqs: list[Request], db: ShardedDatabase,
-                      n: int, bucket: int, tenant: str) -> BatchHandle:
+                      delta, n: int, bucket: int, tenant: str
+                      ) -> BatchHandle:
         """OMS dispatch: precursor-sort the batch (nearby masses share
         kernel tiles, keeping the static tile budget small — pad rows
         inherit the highest real precursor), plan host-side, launch the
         banded search. Results unsort at finalize; FDR routing is
-        order-independent."""
+        order-independent. With a non-empty delta the plan and search run
+        merged over base + delta (see :mod:`repro.serve.delta`) — the
+        fused-e2e shortcut falls back to the staged pipeline for those
+        batches, which is bit-identical."""
         srv = self.server
         prec = np.asarray([r.precursor for r in reqs], np.float32)
         order = np.argsort(prec, kind="stable")
         inv = np.argsort(order, kind="stable")
         prec_padded = np.concatenate(
             [prec[order], np.full(bucket - n, prec[order][-1], np.float32)])
-        plan = oms_plan(db, prec_padded, srv.oms)
-        if srv.encoder is not None and srv.fused_e2e:
+        num_decoys = None
+        if delta is not None:
+            from repro.serve.delta import merged_oms_plan, \
+                merged_oms_search_encoded
+            mplan = merged_oms_plan(db, delta, prec_padded, srv.oms)
+            batch = srv._encode_batch(reqs, db, bucket, tenant)
+            q_enc = jax.device_put(
+                np.concatenate([batch[:n][order], batch[n:]]))
+            raw = srv._raw_batch(reqs, bucket)
+            q_raw = jax.device_put(
+                np.concatenate([raw[:n][order], raw[n:]]))
+            idx, vals = merged_oms_search_encoded(db, delta, q_enc, q_raw,
+                                                  mplan, srv.k)
+            plan = mplan
+            num_decoys = db.num_decoys + delta.num_decoys
+        elif srv.encoder is not None and srv.fused_e2e:
+            plan = oms_plan(db, prec_padded, srv.oms)
             batch = srv._levels_batch(reqs, bucket)
             sorted_batch = np.concatenate([batch[:n][order], batch[n:]])
             idx, vals = oms_search_levels(
                 db, srv.encoder, jax.device_put(sorted_batch), plan, srv.k,
                 fused_e2e=True)
         else:
+            plan = oms_plan(db, prec_padded, srv.oms)
             batch = srv._encode_batch(reqs, db, bucket, tenant)
             sorted_batch = np.concatenate([batch[:n][order], batch[n:]])
             idx, vals = oms_search_encoded(
@@ -1052,12 +1124,62 @@ class SearchExecutor:
         srv._oms_scan_frac += plan.scanned_fraction
         srv._oms_no_candidate += int((~valid).sum())
         return BatchHandle(reqs=reqs, tenant=tenant, db=db, n=n, idx=idx,
-                           vals=vals, valid=valid, inv=inv, oms=True)
+                           vals=vals, valid=valid, inv=inv, oms=True,
+                           num_decoys=num_decoys)
 
-    def poll(self, handle: BatchHandle) -> bool:
-        return bool(getattr(handle.vals, "is_ready", lambda: True)())
+    def _dispatch_cluster(self, reqs: list[Request], tenant: str
+                          ) -> ClusterBatchHandle:
+        """Clustering dispatch: launch the batch-vs-centroids distance
+        matrix (device, async) against the tenant's current snapshot;
+        the assign-or-spawn loop runs at finalize."""
+        srv = self.server
+        cl = srv.clusterers.setdefault(
+            tenant, StreamingClusterer(srv.clustering))
+        n = len(reqs)
+        bucket = bucket_for(n, srv.buckets)
+        srv._bucket_counts[bucket] += 1
+        hvs = np.zeros((bucket, srv.clustering.dim), np.int8)
+        for i, r in enumerate(reqs):
+            hvs[i] = r.query
+        dists = cl.snapshot_distances(hvs)
+        return ClusterBatchHandle(reqs=reqs, tenant=tenant, n=n, hvs=hvs,
+                                  dists=dists, c0=cl.num_clusters,
+                                  struct_version=cl.struct_version)
 
-    def finalize(self, handle: BatchHandle) -> list[Request]:
+    def poll(self, handle) -> bool:
+        arr = (handle.dists if isinstance(handle, ClusterBatchHandle)
+               else handle.vals)
+        if arr is None:
+            return True
+        return bool(getattr(arr, "is_ready", lambda: True)())
+
+    def _finalize_cluster(self, handle: ClusterBatchHandle) -> list[Request]:
+        srv = self.server
+        cl = srv.clusterers[handle.tenant]
+        dists = (None if handle.dists is None
+                 else np.asarray(handle.dists)[:handle.n])  # blocks
+        assigns = cl.assign_batch(handle.hvs[:handle.n], dists, handle.c0,
+                                  handle.struct_version)
+        t_done = srv._clock()
+        live: list[Request] = []
+        for r, a in zip(handle.reqs, assigns):
+            if r.cancelled:
+                # the spectrum still entered the cluster state (it was
+                # ingested); only the response is dropped
+                continue
+            r.result = a
+            r.t_done = t_done
+            live.append(r)
+        srv._cluster_requests += len(live)
+        if live:
+            srv.stats.record_batch(live)
+            srv.tenant_stats.setdefault(
+                handle.tenant, LatencyStats()).record_batch(live)
+        return live
+
+    def finalize(self, handle) -> list[Request]:
+        if isinstance(handle, ClusterBatchHandle):
+            return self._finalize_cluster(handle)
         srv = self.server
         n = handle.n
         idx = np.asarray(handle.idx)[:n]   # blocks until the device is done
@@ -1066,7 +1188,8 @@ class SearchExecutor:
             idx, vals = idx[handle.inv], vals[handle.inv]
         valid = None if handle.valid is None else jnp.asarray(handle.valid)
         routed = fdr_route(handle.db, jnp.asarray(idx), jnp.asarray(vals),
-                           fdr=srv.fdr, valid=valid)
+                           fdr=srv.fdr, valid=valid,
+                           num_decoys=handle.num_decoys)
         t_done = srv._clock()
         live: list[Request] = []
         for i, r in enumerate(handle.reqs):
@@ -1128,6 +1251,20 @@ class DBSearchServer:
     device — staged (cacheable, default) or, with ``fused_e2e=True``, as
     one fused encode->pack->search kernel dispatch per shard. Without an
     encoder, submits carry pre-encoded bipolar (D,) HVs as before.
+
+    **Live banks.** ``append`` streams new refs/decoys into a tenant's
+    bank through the registry's delta path (:mod:`repro.serve.delta`) —
+    searches stay exact and bit-identical to a rebuilt bank — and, with
+    ``compact_threshold=``, ``step`` folds oversized deltas back into
+    the packed base between batches.
+
+    **Clustering endpoint.** With ``clustering=`` (a
+    :class:`~repro.serve.clustering.ClusteringConfig`),
+    ``submit_cluster`` enqueues spectra for per-tenant streaming
+    assign-or-spawn clustering — a second request *kind* sharing the
+    queue, fairness policy, buckets, and (continuous mode) scheduler
+    slots with search; results are
+    :class:`~repro.serve.clustering.ClusterAssignment` objects.
     """
 
     def __init__(self, db: ShardedDatabase | BankRegistry, *, k: int = 4,
@@ -1141,7 +1278,9 @@ class DBSearchServer:
                  encoder: QueryEncoder | None = None,
                  fused_e2e: bool = False,
                  continuous: bool = False, num_slots: int = 2,
-                 executor=None):
+                 executor=None,
+                 compact_threshold: float | None = None,
+                 clustering: ClusteringConfig | None = None):
         if isinstance(db, BankRegistry):
             self.db = None
             self.banks = db
@@ -1178,6 +1317,13 @@ class DBSearchServer:
         self.fused_e2e = bool(fused_e2e)
         if self.fused_e2e and encoder is None:
             raise ValueError("fused_e2e=True requires encoder=")
+        if compact_threshold is not None and not 0 < compact_threshold <= 1:
+            raise ValueError(f"compact_threshold must be in (0, 1], got "
+                             f"{compact_threshold}")
+        self.compact_threshold = compact_threshold
+        self.clustering = clustering
+        self.clusterers: dict[str, StreamingClusterer] = {}
+        self._cluster_requests = 0
         self.executor = SearchExecutor(self) if executor is None else executor
         self.scheduler = (ContinuousScheduler(self.queue, self.executor,
                                               num_slots=num_slots,
@@ -1209,6 +1355,30 @@ class DBSearchServer:
             raise ValueError("OMS serving mode requires precursor= on submit")
         return self.queue.submit(q, tenant=tenant, precursor=precursor)
 
+    def submit_cluster(self, query_hv, tenant: str = "default") -> int:
+        """Enqueue one spectrum HV for the clustering endpoint (requires
+        the server was built with ``clustering=``). Clustering tenants
+        are independent of bank tenants — state is created on first use.
+        The result is a :class:`~repro.serve.clustering.ClusterAssignment`."""
+        if self.clustering is None:
+            raise ValueError("server was built without clustering=; pass a "
+                             "ClusteringConfig to serve the clustering "
+                             "endpoint")
+        q = np.asarray(query_hv, dtype=np.int8)
+        if q.shape != (self.clustering.dim,):
+            raise ValueError(
+                f"query shape {q.shape} != ({self.clustering.dim},)")
+        return self.queue.submit(q, tenant=tenant, kind="cluster")
+
+    def append(self, tenant: str, refs, decoys=None, *, precursor=None,
+               decoy_precursor=None) -> int:
+        """Stream new refs/decoys into a tenant's bank (delegates to
+        :meth:`~repro.serve.cache.BankRegistry.append`); subsequent
+        searches take the exact merged base+delta path until compaction
+        folds the delta in."""
+        return self.banks.append(tenant, refs, decoys, precursor=precursor,
+                                 decoy_precursor=decoy_precursor)
+
     def cancel(self, rid: int) -> bool:
         """Best-effort cancel: un-queue a pending request, or (continuous
         mode) drop an in-flight one's result at retire time."""
@@ -1226,6 +1396,23 @@ class DBSearchServer:
                                      self.encoder.level_hvs)
             return encode_queries(db, hv)
         return encode_queries(db, qs)
+
+    def _raw_batch(self, reqs: list[Request], bucket: int) -> np.ndarray:
+        """Stacked raw bipolar (bucket, D) int8 rows — the query form the
+        *unpacked* delta side of a merged search scores against. Encoder
+        servers stage the deterministic Eq. 1 encode first, so these are
+        exactly the HVs the base side packs."""
+        if self.encoder is not None:
+            levels = self._levels_batch(reqs, bucket)
+            hv = encode_levels_batch(jnp.asarray(levels, jnp.int32),
+                                     self.encoder.id_hvs,
+                                     self.encoder.level_hvs)
+            return np.asarray(hv, np.int8)
+        dim = len(reqs[0].query)
+        out = np.zeros((bucket, dim), np.int8)
+        for i, r in enumerate(reqs):
+            out[i] = r.query
+        return out
 
     def _levels_batch(self, reqs: list[Request], bucket: int) -> np.ndarray:
         """Assemble the raw (bucket, F) level batch for the fused-e2e
@@ -1282,7 +1469,12 @@ class DBSearchServer:
         the queue policy says so — or unconditionally (pending > 0) with
         ``force``, used to drain on shutdown. Continuous mode retires
         completed slots and refills them from the queue without blocking
-        (``force`` waits out in-flight slots instead)."""
+        (``force`` waits out in-flight slots instead). Either way, due
+        compactions run first — "background" compaction happens between
+        batches, never under one, so no queued request is dropped (slots
+        already in flight keep their pre-compaction bank handle, whose
+        merged results are bit-identical anyway)."""
+        self._maybe_compact()
         if self.scheduler is not None:
             return self.scheduler.step(block=force)
         if not (self.queue.ready() or (force and len(self.queue))):
@@ -1291,6 +1483,18 @@ class DBSearchServer:
         if not reqs:
             return []
         return self.executor.finalize(self.executor.dispatch(reqs))
+
+    def _maybe_compact(self) -> int:
+        """Fold every delta past ``compact_threshold`` (delta fraction)
+        into its base bank; returns the number of tenants compacted."""
+        if self.compact_threshold is None:
+            return 0
+        done = 0
+        for t in self.banks.tenants_with_delta():
+            if self.banks.delta_fraction(t) >= self.compact_threshold:
+                if self.banks.compact(t):
+                    done += 1
+        return done
 
     def run_until_drained(self) -> list[Request]:
         """Serve until queue and in-flight slots are empty; returns all
@@ -1323,6 +1527,17 @@ class DBSearchServer:
         s["mode"] = "continuous" if self.scheduler is not None else "flush-sync"
         s["scheduler"] = (None if self.scheduler is None
                           else self.scheduler.summary())
+        s["ingest"] = {
+            "compact_threshold": self.compact_threshold,
+            "appends": self.banks.appends,
+            "compactions": self.banks.compactions,
+            "tenants_with_delta": self.banks.tenants_with_delta(),
+        }
+        s["clustering"] = (None if self.clustering is None else {
+            "requests": self._cluster_requests,
+            "tenants": {t: c.summary()
+                        for t, c in self.clusterers.items()},
+        })
         s["e2e"] = (None if self.encoder is None else {
             "fused": self.fused_e2e,
             "num_features": self.encoder.num_features,

@@ -18,6 +18,12 @@ while other tenants wait, and the tenant just served is skipped on the
 next pick — so one hot tenant can neither fill every flush nor take
 consecutive flushes while others are pending.
 
+Lanes are actually keyed by ``(tenant, kind)``: a server that exposes
+several request types (DB search and the clustering endpoint) gets
+kind-homogeneous batches from the same flush/fairness machinery — a
+tenant's search lane and cluster lane rotate against each other exactly
+like two tenants would.
+
 The clock is injectable so flush-on-timeout is deterministic to test:
 
 >>> now = [0.0]
@@ -62,6 +68,7 @@ class Request:
     precursor: float | None = None  # query precursor mass (OMS serving mode)
     t_dispatch: float | None = None  # left the queue for the device
     cancelled: bool = False          # dropped by the scheduler's cancel()
+    kind: str = "search"             # request type: "search" | "cluster"
 
     @property
     def latency_s(self) -> float:
@@ -104,36 +111,41 @@ class MicroBatchQueue:
         self.flush_timeout_s = float(flush_timeout_s)
         self.fairness_cap = fairness_cap
         self._clock = clock
-        self._pending: dict[str, collections.deque[Request]] = {}
+        # lane key: (tenant, kind) — see module docstring
+        self._pending: dict[tuple[str, str],
+                            collections.deque[Request]] = {}
         self._next_rid = 0
-        self._last_served: str | None = None
+        self._last_served: tuple[str, str] | None = None
 
     def __len__(self) -> int:
         return sum(len(d) for d in self._pending.values())
 
     def pending_tenants(self) -> list[str]:
         """Tenants with at least one pending request (insertion order)."""
-        return list(self._pending)
+        return list(dict.fromkeys(t for t, _ in self._pending))
 
     def submit(self, query, tenant: str = "default",
-               precursor: float | None = None) -> int:
+               precursor: float | None = None,
+               kind: str = "search") -> int:
         """Enqueue one query; returns its request id (FIFO-ordered)."""
         req = Request(rid=self._next_rid, query=query, tenant=tenant,
-                      t_submit=self._clock(), precursor=precursor)
+                      t_submit=self._clock(), precursor=precursor,
+                      kind=kind)
         self._next_rid += 1
-        self._pending.setdefault(tenant, collections.deque()).append(req)
+        self._pending.setdefault((tenant, kind),
+                                 collections.deque()).append(req)
         return req.rid
 
     def cancel(self, rid: int) -> bool:
         """Remove a still-pending request from its lane. Returns False when
         ``rid`` is not pending (already taken by a flush, or unknown) —
         in-flight cancellation is the scheduler's job."""
-        for tenant, lane in self._pending.items():
+        for key, lane in self._pending.items():
             for r in lane:
                 if r.rid == rid:
                     lane.remove(r)
                     if not lane:
-                        del self._pending[tenant]
+                        del self._pending[key]
                     return True
         return False
 
@@ -165,11 +177,11 @@ class MicroBatchQueue:
             return 0.0
         return max(0.0, self.flush_timeout_s - self.oldest_age_s())
 
-    def next_tenant(self) -> str | None:
-        """The tenant the next ``take_batch`` would serve: the oldest full
-        lane, else the tenant of the globally-oldest request — except
-        that, under a ``fairness_cap``, the tenant served by the previous
-        flush is skipped while other tenants are waiting."""
+    def _next_lane(self) -> tuple[str, str] | None:
+        """The lane the next ``take_batch`` would serve: the oldest full
+        lane, else the lane of the globally-oldest request — except that,
+        under a ``fairness_cap``, the lane served by the previous flush
+        is skipped while other lanes are waiting."""
         lanes = self._pending
         if (self.fairness_cap is not None and len(lanes) > 1
                 and self._last_served in lanes):
@@ -177,26 +189,37 @@ class MicroBatchQueue:
         full = [d[0] for d in lanes.values()
                 if len(d) >= self.max_batch_size]
         if full:
-            return min(full, key=lambda r: r.rid).tenant
-        heads = [d[0] for d in lanes.values() if d]
-        return min(heads, key=lambda r: r.rid).tenant if heads else None
+            head = min(full, key=lambda r: r.rid)
+        else:
+            heads = [d[0] for d in lanes.values() if d]
+            if not heads:
+                return None
+            head = min(heads, key=lambda r: r.rid)
+        return (head.tenant, head.kind)
+
+    def next_tenant(self) -> str | None:
+        """The tenant the next ``take_batch`` would serve (see
+        ``_next_lane`` — lane selection is per (tenant, kind))."""
+        lane = self._next_lane()
+        return None if lane is None else lane[0]
 
     def take_batch(self) -> list[Request]:
-        """Pop up to ``max_batch_size`` requests of one tenant in FIFO
-        order (may be called unconditionally, e.g. to drain on shutdown).
-        With other tenants waiting, the flush is additionally capped at
-        ``fairness_cap`` requests."""
-        tenant = self.next_tenant()
-        if tenant is None:
+        """Pop up to ``max_batch_size`` requests of one lane (single
+        tenant, single kind) in FIFO order (may be called
+        unconditionally, e.g. to drain on shutdown). With other lanes
+        waiting, the flush is additionally capped at ``fairness_cap``
+        requests."""
+        key = self._next_lane()
+        if key is None:
             return []
-        lane = self._pending[tenant]
+        lane = self._pending[key]
         n = min(len(lane), self.max_batch_size)
         if self.fairness_cap is not None and len(self._pending) > 1:
             n = min(n, self.fairness_cap)
         batch = [lane.popleft() for _ in range(n)]
         if not lane:
-            del self._pending[tenant]
-        self._last_served = tenant
+            del self._pending[key]
+        self._last_served = key
         return batch
 
 

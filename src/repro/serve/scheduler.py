@@ -30,6 +30,10 @@ as the scheduler — see ``tests/test_scheduler.py``):
     Production uses :class:`~repro.serve.db_search.SearchExecutor`
     (async JAX dispatch + ``jax.device_put``; ``poll`` via
     ``Array.is_ready``); tests use recording/simulated executors.
+    Handles are *opaque* to the scheduler — which is how the clustering
+    endpoint rides the same slot pool: the executor hands back a
+    ``ClusterBatchHandle`` for ``kind="cluster"`` batches and a
+    ``BatchHandle`` for search, and the scheduler never looks inside.
 
 **Backlog policy is the queue's.** The scheduler reuses
 :class:`~repro.serve.queue.MicroBatchQueue` unchanged as its backlog:

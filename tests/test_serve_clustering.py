@@ -1,0 +1,271 @@
+"""Clustering-endpoint tests: streaming assign-or-spawn vs batch complete
+linkage (partition agreement, batch-boundary invariance), periodic
+consolidation (merge folding, id remap chains, stale-snapshot fallback),
+kind-homogeneous queue lanes, mixed search+cluster serving through both
+queue modes, and the serve_cluster launcher smoke."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.hd.clustering import complete_linkage, pairwise_distances
+from repro.serve import (
+    BankRegistry,
+    ClusteringConfig,
+    DBSearchServer,
+    MicroBatchQueue,
+    StreamingClusterer,
+    search_database,
+    shard_database,
+)
+
+D = 64
+
+
+def _proto_stream(rng, n_proto, per_proto, flip_bits):
+    """Well-separated synthetic stream: each point is its prototype with
+    ``flip_bits`` random sign flips (intra-distance <= 2*flip_bits,
+    inter-distance ~ D/2)."""
+    protos = rng.choice([-1, 1], size=(n_proto, D)).astype(np.int8)
+    hvs, truth = [], []
+    for p in range(n_proto):
+        for _ in range(per_proto):
+            hv = protos[p].copy()
+            flips = rng.choice(D, size=flip_bits, replace=False)
+            hv[flips] = -hv[flips]
+            hvs.append(hv)
+            truth.append(p)
+    order = rng.permutation(len(hvs))
+    return (np.asarray(hvs, np.int8)[order],
+            np.asarray(truth, np.int64)[order])
+
+
+def _stream_through(cl, hvs, batch_size):
+    """Feed a stream through the dispatch/finalize pair the executor uses:
+    snapshot distances per batch, sequential assign at finalize."""
+    out = []
+    for i in range(0, hvs.shape[0], batch_size):
+        batch = hvs[i:i + batch_size]
+        c0 = cl.num_clusters
+        sv = cl.struct_version
+        d = cl.snapshot_distances(batch)
+        d = None if d is None else np.asarray(d)
+        out.extend(cl.assign_batch(batch, d, c0, sv))
+    return out
+
+
+def _partition_sets(labels):
+    groups = {}
+    for i, lab in enumerate(labels):
+        groups.setdefault(int(lab), set()).add(i)
+    return sorted(map(frozenset, groups.values()), key=min)
+
+
+def test_streaming_matches_batch_complete_linkage():
+    """On well-separated data the streaming partition equals the batch
+    complete-linkage partition over all points (up to label renaming)."""
+    rng = np.random.default_rng(0)
+    hvs, _ = _proto_stream(rng, n_proto=5, per_proto=8, flip_bits=3)
+    # intra <= 12 bits apart pairwise, inter ~ 32; threshold between
+    cfg = ClusteringConfig(dim=D, threshold=14.0)
+    cl = StreamingClusterer(cfg)
+    assigns = _stream_through(cl, hvs, batch_size=7)
+    stream_labels = cl.labels_for(assigns)
+    batch = complete_linkage(
+        pairwise_distances(jnp.asarray(hvs), dim=D), 14.0)
+    assert _partition_sets(stream_labels) == \
+        _partition_sets(np.asarray(batch.labels))
+    assert cl.num_clusters == 5 and cl.spawned == 5
+
+
+def test_streaming_partition_invariant_to_batch_boundaries():
+    rng = np.random.default_rng(1)
+    hvs, _ = _proto_stream(rng, n_proto=4, per_proto=6, flip_bits=2)
+    parts = []
+    for bs in (1, 5, hvs.shape[0]):
+        cl = StreamingClusterer(ClusteringConfig(dim=D, threshold=10.0))
+        labels = cl.labels_for(_stream_through(cl, hvs, bs))
+        parts.append(_partition_sets(labels))
+    assert parts[0] == parts[1] == parts[2]
+
+
+def test_packed_and_int8_distance_paths_agree():
+    rng = np.random.default_rng(2)
+    hvs, _ = _proto_stream(rng, n_proto=4, per_proto=5, flip_bits=2)
+    out = {}
+    for pack in (True, False):
+        cl = StreamingClusterer(
+            ClusteringConfig(dim=D, threshold=10.0, pack=pack))
+        assigns = _stream_through(cl, hvs, batch_size=4)
+        out[pack] = ([(a.cluster_id, a.spawned, a.distance)
+                      for a in assigns])
+    assert out[True] == out[False]
+
+
+def test_in_batch_spawn_is_assignable_to_its_own_batch():
+    """A spectrum that spawns mid-batch must catch the rest of the batch
+    (host-scored rows past the snapshot), not spawn duplicates."""
+    rng = np.random.default_rng(3)
+    proto = rng.choice([-1, 1], size=D).astype(np.int8)
+    near = proto.copy()
+    near[:2] = -near[:2]  # distance 2
+    cl = StreamingClusterer(ClusteringConfig(dim=D, threshold=5.0))
+    assigns = _stream_through(cl, np.stack([proto, near]), batch_size=2)
+    assert assigns[0].spawned and not assigns[1].spawned
+    assert assigns[1].cluster_id == assigns[0].cluster_id
+    assert assigns[1].distance == 2.0
+    assert cl.num_clusters == 1
+
+
+def test_consolidation_merges_and_remaps():
+    """Streaming keeps two founders apart (> threshold) that complete
+    linkage folds together (<= link_threshold); consolidation must merge
+    them, keep the oldest id canonical, and remap the dropped id."""
+    rng = np.random.default_rng(4)
+    a = rng.choice([-1, 1], size=D).astype(np.int8)
+    b = a.copy()
+    b[:10] = -b[:10]  # distance 10: beyond threshold, within link range
+    cl = StreamingClusterer(ClusteringConfig(
+        dim=D, threshold=4.0, link_threshold=12.0, consolidate_every=2))
+    assigns = _stream_through(cl, np.stack([a, b]), batch_size=2)
+    assert [x.spawned for x in assigns] == [True, True]
+    assert cl.num_clusters == 1 and cl.merges == 1
+    assert cl.consolidations == 1 and cl.struct_version == 1
+    assert cl.resolve(1) == 0 and cl.resolve(0) == 0
+    assert cl.labels_for(assigns).tolist() == [0, 0]
+    # the merged accumulator is the sum of both members
+    np.testing.assert_array_equal(
+        cl.centroid(1), np.where(a.astype(np.int32) + b >= 0, 1, -1))
+    s = cl.summary()
+    assert s["clusters"] == 1 and s["merges"] == 1
+
+
+def test_stale_snapshot_falls_back_to_host_scoring():
+    """Distances snapshotted before a consolidation restructured the rows
+    must not be trusted at finalize — the batch is re-scored host-side
+    and still lands in the merged cluster."""
+    rng = np.random.default_rng(5)
+    a = rng.choice([-1, 1], size=D).astype(np.int8)
+    b = a.copy()
+    b[:10] = -b[:10]
+    cl = StreamingClusterer(ClusteringConfig(
+        dim=D, threshold=4.0, link_threshold=12.0, consolidate_every=2))
+    merged_cent = np.where(a.astype(np.int32) + b >= 0, 1, -1).astype(np.int8)
+    probe = merged_cent.copy()
+    probe[:1] = -probe[:1]  # distance 1 from the merged centroid
+    # snapshot against the pre-consolidation 2-row bank...
+    _stream_through(cl, np.stack([a, b]), batch_size=2)
+    stale_dists = np.asarray([[50.0, 0.0]])  # would pick the dropped row
+    assert cl.struct_version == 1
+    out = cl.assign_batch(probe[None, :], stale_dists, 2, struct_version=0)
+    assert not out[0].spawned and cl.resolve(out[0].cluster_id) == 0
+    assert out[0].distance == 1.0
+
+
+def test_clustering_config_properties():
+    assert ClusteringConfig(dim=64, threshold=4.0).packed
+    assert not ClusteringConfig(dim=48, threshold=4.0).packed
+    assert ClusteringConfig(dim=48, threshold=4.0, pack=True).packed
+    c = ClusteringConfig(dim=64, threshold=4.0)
+    assert c.merge_threshold == 4.0
+    assert ClusteringConfig(dim=64, threshold=4.0,
+                            link_threshold=9.0).merge_threshold == 9.0
+
+
+# --------------------------------------------------------------------------
+# queue lanes + server endpoint
+# --------------------------------------------------------------------------
+
+def test_queue_lanes_are_kind_homogeneous():
+    t = [0.0]
+    q = MicroBatchQueue(max_batch_size=4, flush_timeout_s=0.0,
+                        clock=lambda: t[0])
+    r0 = q.submit(np.zeros(4, np.int8), tenant="a")
+    r1 = q.submit(np.zeros(4, np.int8), tenant="a", kind="cluster")
+    r2 = q.submit(np.zeros(4, np.int8), tenant="a")
+    r3 = q.submit(np.zeros(4, np.int8), tenant="a", kind="cluster")
+    b1 = q.take_batch()
+    assert [r.rid for r in b1] == [r0, r2]  # oldest lane first, search only
+    assert all(r.kind == "search" for r in b1)
+    b2 = q.take_batch()
+    assert [r.rid for r in b2] == [r1, r3]
+    assert all(r.kind == "cluster" for r in b2)
+
+
+@pytest.mark.parametrize("continuous", [False, True])
+def test_server_mixed_search_and_cluster_kinds(continuous):
+    """Search and clustering share the queue/scheduler but never share a
+    batch; both endpoints return correct results for interleaved
+    submissions."""
+    rng = np.random.default_rng(6)
+    refs = rng.choice([-1, 1], size=(20, D)).astype(np.int8)
+    dec = rng.choice([-1, 1], size=(10, D)).astype(np.int8)
+    reg = BankRegistry(emulate_shards=2)
+    reg.register("a", jnp.asarray(refs), decoys=jnp.asarray(dec))
+    ccfg = ClusteringConfig(dim=D, threshold=10.0)
+    srv = DBSearchServer(reg, k=3, fdr=0.5, max_batch_size=4,
+                         flush_timeout_s=0.0, clustering=ccfg,
+                         continuous=continuous)
+    hvs, _ = _proto_stream(rng, n_proto=3, per_proto=4, flip_bits=2)
+    queries = rng.choice([-1, 1], size=(8, D)).astype(np.int8)
+    search_rids, cluster_rids = [], []
+    for i in range(max(len(hvs), len(queries))):
+        if i < len(queries):
+            search_rids.append(srv.submit(queries[i], tenant="a"))
+        if i < len(hvs):
+            cluster_rids.append(srv.submit_cluster(hvs[i], tenant="a"))
+    done = {r.rid: r for r in srv.run_until_drained()}
+    assert sorted(done) == sorted(search_rids + cluster_rids)
+
+    oi, _ = search_database(reg.get("a"), jnp.asarray(queries), 3)
+    for i, rid in enumerate(search_rids):
+        np.testing.assert_array_equal(done[rid].result.indices,
+                                      np.asarray(oi)[i])
+    cl = srv.clusterers["a"]
+    labels = cl.labels_for([done[r].result for r in cluster_rids])
+    # same partition as a fresh replay in submission order
+    ref = StreamingClusterer(ccfg)
+    ref_labels = ref.labels_for(
+        _stream_through(ref, hvs, batch_size=len(hvs)))
+    assert _partition_sets(labels) == _partition_sets(ref_labels)
+    s = srv.summary()
+    assert s["clustering"]["requests"] == len(cluster_rids)
+    assert s["clustering"]["tenants"]["a"]["assigned"] == len(hvs)
+
+
+def test_cluster_tenants_are_independent():
+    rng = np.random.default_rng(7)
+    srv = DBSearchServer(BankRegistry(), max_batch_size=4,
+                         flush_timeout_s=0.0,
+                         clustering=ClusteringConfig(dim=D, threshold=10.0))
+    hv = rng.choice([-1, 1], size=D).astype(np.int8)
+    srv.submit_cluster(hv, tenant="t0")
+    srv.submit_cluster(hv, tenant="t1")
+    srv.run_until_drained()
+    assert srv.clusterers["t0"].num_clusters == 1
+    assert srv.clusterers["t1"].num_clusters == 1
+
+
+def test_submit_cluster_validation():
+    srv = DBSearchServer(BankRegistry())
+    with pytest.raises(ValueError, match="without clustering"):
+        srv.submit_cluster(np.zeros(D, np.int8))
+    srv2 = DBSearchServer(BankRegistry(),
+                          clustering=ClusteringConfig(dim=D, threshold=4.0))
+    with pytest.raises(ValueError, match="query shape"):
+        srv2.submit_cluster(np.zeros(D + 1, np.int8))
+
+
+def test_serve_cluster_cli_smoke():
+    from repro.launch import serve_cluster
+    s = serve_cluster.main(["--reduced", "--hd-dim", "64",
+                            "--identities", "6",
+                            "--spectra-per-identity", "4",
+                            "--max-batch", "4", "--tenants", "2",
+                            "--consolidate-every", "16"])
+    assert s["count"] == 48 and s["qps"] > 0
+    for tenant in ("tenant0", "tenant1"):
+        q = s["cluster_quality"][tenant]
+        assert q["clusters"] >= 1 and q["assigned"] == 24
+        assert 0.0 <= q["incorrect_ratio"] <= 1.0
