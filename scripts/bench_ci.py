@@ -19,9 +19,13 @@ base bank / the merged base+delta path / the post-compaction bank, and
 the delta fraction — hard-floored at delta-path qps within 1.5x of
 pure-base, the PR-8 acceptance bound), and clustering-endpoint metrics
 (``cluster_*``: spectra/sec plus the paper's incorrect-clustering
-ratio from a reduced ``repro.launch.serve_cluster`` run), and writes
-the result as a repo-root ``BENCH_PR<N>.json`` — the artifact CI
-uploads so every PR leaves a perf data point behind. The output name
+ratio from a reduced ``repro.launch.serve_cluster`` run), and
+autotuner metrics (``tune_*``: measured compute / memory-bandwidth
+ceilings and the worst tuned-vs-default timing ratio from a reduced
+``repro.tune`` sweep — hard-floored at >= 0.95, and the resulting
+``artifacts/tuning_table.json`` is uploaded as a CI artifact), and
+writes the result as a repo-root ``BENCH_PR<N>.json`` — the artifact
+CI uploads so every PR leaves a perf data point behind. The output name
 needs no hand-editing per PR: ``--pr`` wins if given, else the
 ``REPRO_BENCH_PR`` env var, else under ``GITHUB_ACTIONS`` the newest
 committed ``BENCH_PR<N>`` is *re-run* (so the previous PR's file stays
@@ -376,6 +380,66 @@ def train_metrics() -> tuple[list[dict], dict]:
     return rows, summary
 
 
+def tune_metrics() -> dict:
+    """Reduced autotuner run -> measured ceilings + tuned-vs-default ratio.
+
+    Builds a quick tuning table (``repro.tune``: growing-matmul /
+    growing-copy ceiling microbenchmarks plus a reduced block-size sweep
+    over every kernel op) at ``artifacts/tuning_table.json`` — the
+    artifact CI uploads next to the bench JSON — and reports the worst
+    tuned-vs-default timing ratio across all table entries. The sweep
+    only accepts a candidate that is bit-identical to the default config
+    and >=3% faster, so the ratio has a structural floor near 1; the
+    hard gate in ``tune_failures`` holds it at >= 0.95 (tuned configs
+    must never make a kernel materially slower than the hand-tuned
+    defaults)."""
+    from repro.tune.sweep import build_tuning_table, tuned_vs_default_ratio
+
+    out = REPO / "artifacts" / "tuning_table.json"
+    table = build_tuning_table(out, quick=True, iters=3)
+    ceil = table.ceilings or {}
+    entries = sum(len(b) for b in table.ops.values())
+    non_default = sum(
+        1 for buckets in table.ops.values() for e in buckets.values()
+        if e.get("us") and e.get("default_us")
+        and e["us"] < e["default_us"])
+    return {
+        "tune_peak_gflops": ceil.get("peak_flops", 0.0) / 1e9,
+        "tune_mem_gbs": ceil.get("hbm_bw", 0.0) / 1e9,
+        "tune_device_kind": table.device_kind,
+        "tune_entries": entries,
+        "tune_non_default_entries": non_default,
+        "tune_tuned_vs_default": tuned_vs_default_ratio(table),
+        "tune_table_path": str(out.relative_to(REPO)),
+    }
+
+
+def tune_failures(tune: dict | None) -> list[str]:
+    """Hard failures from the autotuner floor: every table entry must
+    run at >= 0.95x default-config throughput on its sweep workload
+    (``tuned_vs_default_ratio`` is the worst ``default_us / tuned_us``
+    across entries; >= 1 when every winner is at least as fast as the
+    default it displaced). A ratio below 0.95 means the sweep picked a
+    config that made a kernel materially slower than the hand-tuned
+    defaults — the table would be a de-optimization.
+    The measured ceilings must also be positive (a zero ceiling would
+    silently poison every dryrun roofline). Checked whenever the tune
+    run ran, baseline or not."""
+    if not tune:
+        return []
+    fails = []
+    ratio = tune["tune_tuned_vs_default"]
+    if ratio < 0.95:
+        fails.append(f"tune: tuned-vs-default ratio {ratio:.3f} < 0.95 "
+                     "(a swept block config is materially slower than the "
+                     "hand-tuned defaults)")
+    if tune["tune_peak_gflops"] <= 0 or tune["tune_mem_gbs"] <= 0:
+        fails.append(f"tune: non-positive measured ceiling "
+                     f"(peak {tune['tune_peak_gflops']:.2f} GFLOP/s, "
+                     f"hbm {tune['tune_mem_gbs']:.2f} GB/s)")
+    return fails
+
+
 def train_failures(train: dict | None) -> list[str]:
     """Hard failures from the training wire-traffic floor: the compressed
     payload *measured* from a real dcn_send (nonzero coordinates actually
@@ -609,6 +673,8 @@ def main(argv=None) -> int:
                     help="skip the reduced serve_db run (suites only)")
     ap.add_argument("--skip-train", action="store_true",
                     help="skip the reduced hierarchical train runs")
+    ap.add_argument("--skip-tune", action="store_true",
+                    help="skip the reduced autotuner sweep")
     args = ap.parse_args(argv)
     if args.output is None:
         args.output = REPO / f"BENCH_PR{derive_pr_number(args.pr)}.json"
@@ -623,6 +689,9 @@ def main(argv=None) -> int:
         serving = serving_metrics()
         serving.update(ingest_metrics())
         serving.update(cluster_metrics())
+    tune = None
+    if not args.skip_tune:
+        tune = tune_metrics()
     result = {
         "schema": 1,
         "source": "scripts/bench_ci.py",
@@ -631,6 +700,7 @@ def main(argv=None) -> int:
         "rows": rows,
         "serving": serving,
         "train": train,
+        "tune": tune,
     }
     args.output.write_text(json.dumps(result, indent=2) + "\n")
     print(f"wrote {args.output} ({len(rows)} timing rows"
@@ -648,9 +718,14 @@ def main(argv=None) -> int:
          "spectra/s")
           + ("" if args.skip_train else
          f", train DCN {max(v['reduction_x'] for k, v in train.items() if k != 'none'):.1f}x compressed")
+          + ("" if args.skip_tune else
+         f", tune ceilings {tune['tune_peak_gflops']:.0f} GFLOP/s / "
+         f"{tune['tune_mem_gbs']:.0f} GB/s, tuned-vs-default "
+         f"{tune['tune_tuned_vs_default']:.2f}")
           + ")")
 
     hard_failures = (artifact_failures(rows) + train_failures(train)
+                     + tune_failures(tune)
                      + oms_failures(result["serving"])
                      + continuous_failures(result["serving"])
                      + ingest_failures(result["serving"]))

@@ -23,6 +23,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.block_utils import resolve_blocks
 from repro.kernels.encode_search.encode_search import (
     encode_search_banded_pallas_call,
     encode_search_pallas_call,
@@ -84,8 +85,6 @@ def _pad_operands(levels, id_hvs, level_hvs, r, *, packed: bool, bq: int,
     return levels, id_hvs, level_hvs, r
 
 
-@partial(jax.jit, static_argnames=("dim", "k", "block_q", "block_r",
-                                   "block_f", "word_chunk", "interpret"))
 def encode_search_pallas(
     levels: jax.Array,     # (Q, F) int quantized intensity levels
     id_hvs: jax.Array,     # (F, D) int8 bipolar ID codebook
@@ -95,10 +94,10 @@ def encode_search_pallas(
     dim: int,
     k: int,
     num_valid: jax.Array | int | None = None,
-    block_q: int = 8,
-    block_r: int = 128,
-    block_f: int = 128,
-    word_chunk: int = 32,
+    block_q: int | None = None,
+    block_r: int | None = None,
+    block_f: int | None = None,
+    word_chunk: int | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused query pipeline: raw (Q, F) spectra -> (idx (Q, k), vals (Q, k)).
@@ -110,8 +109,37 @@ def encode_search_pallas(
     hypervector and the (Q, R) score matrix never leave VMEM: only the
     (Q, k) winners reach HBM. ``dim`` must be the true HD dimensionality
     (``id_hvs.shape[1]``); the bank's dtype selects the packed
-    XOR+popcount or int8-dot score path.
+    XOR+popcount or int8-dot score path. Blocks resolve explicit ->
+    tuning table -> defaults (:mod:`repro.kernels.block_utils`).
     """
+    cfg = resolve_blocks(
+        "encode_search", (levels.shape[0], r.shape[0], levels.shape[1]),
+        {"block_q": block_q, "block_r": block_r, "block_f": block_f,
+         "word_chunk": word_chunk})
+    return _encode_search_jit(
+        levels, id_hvs, level_hvs, r, dim=dim, k=k, num_valid=num_valid,
+        block_q=cfg["block_q"], block_r=cfg["block_r"],
+        block_f=cfg["block_f"], word_chunk=cfg["word_chunk"],
+        interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("dim", "k", "block_q", "block_r",
+                                   "block_f", "word_chunk", "interpret"))
+def _encode_search_jit(
+    levels: jax.Array,
+    id_hvs: jax.Array,
+    level_hvs: jax.Array,
+    r: jax.Array,
+    *,
+    dim: int,
+    k: int,
+    num_valid: jax.Array | int | None,
+    block_q: int,
+    block_r: int,
+    block_f: int,
+    word_chunk: int,
+    interpret: bool | None,
+) -> tuple[jax.Array, jax.Array]:
     if interpret is None:
         interpret = _default_interpret()
     packed = _check_operands(levels, id_hvs, level_hvs, r, k)
@@ -132,9 +160,6 @@ def encode_search_pallas(
     return idx[:Q], vals[:Q]
 
 
-@partial(jax.jit, static_argnames=("dim", "k", "num_tiles", "block_q",
-                                   "block_r", "block_f", "word_chunk",
-                                   "interpret", "canonicalize"))
 def encode_search_banded_pallas(
     levels: jax.Array,
     id_hvs: jax.Array,
@@ -147,10 +172,10 @@ def encode_search_banded_pallas(
     k: int,
     num_valid: jax.Array | int | None = None,
     num_tiles: int | None = None,
-    block_q: int = 8,
-    block_r: int = 128,
-    block_f: int = 128,
-    word_chunk: int = 32,
+    block_q: int | None = None,
+    block_r: int | None = None,
+    block_f: int | None = None,
+    word_chunk: int | None = None,
     interpret: bool | None = None,
     canonicalize: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
@@ -159,8 +184,44 @@ def encode_search_banded_pallas(
     precursor window over a precursor-sorted bank), scanning only
     ``num_tiles`` R tiles per Q block. Same contract — tile budget,
     clipping, overflow canonicalization — as
-    ``topk_hamming_banded_pallas``, with the encode fused in.
+    ``topk_hamming_banded_pallas``, with the encode fused in. Blocks
+    resolve under the op key ``encode_search_banded``.
     """
+    cfg = resolve_blocks(
+        "encode_search_banded",
+        (levels.shape[0], r.shape[0], levels.shape[1]),
+        {"block_q": block_q, "block_r": block_r, "block_f": block_f,
+         "word_chunk": word_chunk})
+    return _encode_search_banded_jit(
+        levels, id_hvs, level_hvs, r, starts, lens, dim=dim, k=k,
+        num_valid=num_valid, num_tiles=num_tiles, block_q=cfg["block_q"],
+        block_r=cfg["block_r"], block_f=cfg["block_f"],
+        word_chunk=cfg["word_chunk"], interpret=interpret,
+        canonicalize=canonicalize)
+
+
+@partial(jax.jit, static_argnames=("dim", "k", "num_tiles", "block_q",
+                                   "block_r", "block_f", "word_chunk",
+                                   "interpret", "canonicalize"))
+def _encode_search_banded_jit(
+    levels: jax.Array,
+    id_hvs: jax.Array,
+    level_hvs: jax.Array,
+    r: jax.Array,
+    starts: jax.Array,
+    lens: jax.Array,
+    *,
+    dim: int,
+    k: int,
+    num_valid: jax.Array | int | None,
+    num_tiles: int | None,
+    block_q: int,
+    block_r: int,
+    block_f: int,
+    word_chunk: int,
+    interpret: bool | None,
+    canonicalize: bool,
+) -> tuple[jax.Array, jax.Array]:
     if interpret is None:
         interpret = _default_interpret()
     packed = _check_operands(levels, id_hvs, level_hvs, r, k)

@@ -10,11 +10,40 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.block_utils import resolve_blocks
 from repro.kernels.imc_mvm.imc_mvm import imc_mvm_pallas_call
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def imc_mvm_pallas(
+    queries: jax.Array,
+    weights: jax.Array,
+    *,
+    full_scale: float,
+    block_q: int | None = None,
+    block_r: int | None = None,
+    tile_cols: int | None = None,
+    dac_limit: int = 3,
+    adc_levels: int = 31,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(Q, Dp) x (R, Dp) -> (Q, R) through the modeled analog IMC chain.
+
+    Arbitrary Q/R/Dp are zero-padded to block multiples; zero tiles quantize
+    to zero codes so padding does not perturb results. Blocks resolve
+    explicit -> tuning table -> defaults
+    (:mod:`repro.kernels.block_utils`).
+    """
+    cfg = resolve_blocks(
+        "imc_mvm", (queries.shape[0], weights.shape[0], queries.shape[1]),
+        {"block_q": block_q, "block_r": block_r, "tile_cols": tile_cols})
+    return _imc_mvm_jit(
+        queries, weights, full_scale=full_scale, block_q=cfg["block_q"],
+        block_r=cfg["block_r"], tile_cols=cfg["tile_cols"],
+        dac_limit=dac_limit, adc_levels=adc_levels, interpret=interpret)
 
 
 @partial(
@@ -24,23 +53,18 @@ def _default_interpret() -> bool:
         "full_scale", "interpret",
     ),
 )
-def imc_mvm_pallas(
+def _imc_mvm_jit(
     queries: jax.Array,
     weights: jax.Array,
     *,
     full_scale: float,
-    block_q: int = 128,
-    block_r: int = 128,
-    tile_cols: int = 128,
-    dac_limit: int = 3,
-    adc_levels: int = 31,
-    interpret: bool | None = None,
+    block_q: int,
+    block_r: int,
+    tile_cols: int,
+    dac_limit: int,
+    adc_levels: int,
+    interpret: bool | None,
 ) -> jax.Array:
-    """(Q, Dp) x (R, Dp) -> (Q, R) through the modeled analog IMC chain.
-
-    Arbitrary Q/R/Dp are zero-padded to block multiples; zero tiles quantize
-    to zero codes so padding does not perturb results.
-    """
     if interpret is None:
         interpret = _default_interpret()
     q = queries.astype(jnp.float32)

@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.block_utils import resolve_blocks
 from repro.kernels.topk_hamming.topk_hamming import (
     topk_hamming_banded_pallas_call,
     topk_hamming_pallas_call,
@@ -23,8 +24,6 @@ def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
-@partial(jax.jit, static_argnames=("dim", "k", "block_q", "block_r",
-                                   "word_chunk", "interpret"))
 def topk_hamming_pallas(
     q: jax.Array,
     r: jax.Array,
@@ -32,9 +31,9 @@ def topk_hamming_pallas(
     dim: int,
     k: int,
     num_valid: jax.Array | int | None = None,
-    block_q: int = 128,
-    block_r: int = 128,
-    word_chunk: int = 32,
+    block_q: int | None = None,
+    block_r: int | None = None,
+    word_chunk: int | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused top-k search: (Q, W|D) x (R, W|D) -> (idx (Q, k), vals (Q, k)).
@@ -50,9 +49,37 @@ def topk_hamming_pallas(
       ``repro.serve.db_search._local_topk``); may be a traced scalar.
       Defaults to all R rows.
 
+    block_q/block_r/word_chunk: explicit tile sizes (validated for TPU
+      alignment); ``None`` resolves through the active tuning table for
+      this (device kind, shape bucket), else the 128x128 defaults — see
+      :mod:`repro.kernels.block_utils`.
+
     Zero row/word padding is harmless: padded reference rows fall outside
     ``num_valid`` and padded words XOR to zero on both sides.
     """
+    cfg = resolve_blocks(
+        "topk_hamming", (q.shape[0], r.shape[0], q.shape[1]),
+        {"block_q": block_q, "block_r": block_r, "word_chunk": word_chunk})
+    return _topk_hamming_jit(
+        q, r, dim=dim, k=k, num_valid=num_valid, block_q=cfg["block_q"],
+        block_r=cfg["block_r"], word_chunk=cfg["word_chunk"],
+        interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("dim", "k", "block_q", "block_r",
+                                   "word_chunk", "interpret"))
+def _topk_hamming_jit(
+    q: jax.Array,
+    r: jax.Array,
+    *,
+    dim: int,
+    k: int,
+    num_valid: jax.Array | int | None,
+    block_q: int,
+    block_r: int,
+    word_chunk: int,
+    interpret: bool | None,
+) -> tuple[jax.Array, jax.Array]:
     if interpret is None:
         interpret = _default_interpret()
     if q.ndim != 2 or r.ndim != 2 or q.shape[1] != r.shape[1]:
@@ -129,9 +156,6 @@ def canonicalize_overflow_slots(idx: jax.Array, vals: jax.Array,
     return jnp.where(sentinel, col, idx)
 
 
-@partial(jax.jit, static_argnames=("dim", "k", "num_tiles", "block_q",
-                                   "block_r", "word_chunk", "interpret",
-                                   "canonicalize"))
 def topk_hamming_banded_pallas(
     q: jax.Array,
     r: jax.Array,
@@ -142,15 +166,18 @@ def topk_hamming_banded_pallas(
     k: int,
     num_valid: jax.Array | int | None = None,
     num_tiles: int | None = None,
-    block_q: int = 128,
-    block_r: int = 128,
-    word_chunk: int = 32,
+    block_q: int | None = None,
+    block_r: int | None = None,
+    word_chunk: int | None = None,
     interpret: bool | None = None,
     canonicalize: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Banded fused top-k: each query scores only reference rows in its own
     ``[starts[q], starts[q] + lens[q])`` band (an OMS precursor window over
     a precursor-sorted bank).
+
+    Blocks resolve like :func:`topk_hamming_pallas` (explicit -> tuning
+    table -> defaults), under the op key ``topk_hamming_banded``.
 
     Bit-identical to sentinel-masking the full (Q, R) score matrix outside
     the band (and at or past ``num_valid``) and running ``lax.top_k`` — tie
@@ -166,6 +193,35 @@ def topk_hamming_banded_pallas(
       the oracle's ascending masked indices. Per-shard callers that merge
       and canonicalize globally switch this off.
     """
+    cfg = resolve_blocks(
+        "topk_hamming_banded", (q.shape[0], r.shape[0], q.shape[1]),
+        {"block_q": block_q, "block_r": block_r, "word_chunk": word_chunk})
+    return _topk_hamming_banded_jit(
+        q, r, starts, lens, dim=dim, k=k, num_valid=num_valid,
+        num_tiles=num_tiles, block_q=cfg["block_q"], block_r=cfg["block_r"],
+        word_chunk=cfg["word_chunk"], interpret=interpret,
+        canonicalize=canonicalize)
+
+
+@partial(jax.jit, static_argnames=("dim", "k", "num_tiles", "block_q",
+                                   "block_r", "word_chunk", "interpret",
+                                   "canonicalize"))
+def _topk_hamming_banded_jit(
+    q: jax.Array,
+    r: jax.Array,
+    starts: jax.Array,
+    lens: jax.Array,
+    *,
+    dim: int,
+    k: int,
+    num_valid: jax.Array | int | None,
+    num_tiles: int | None,
+    block_q: int,
+    block_r: int,
+    word_chunk: int,
+    interpret: bool | None,
+    canonicalize: bool,
+) -> tuple[jax.Array, jax.Array]:
     if interpret is None:
         interpret = _default_interpret()
     if q.ndim != 2 or r.ndim != 2 or q.shape[1] != r.shape[1]:

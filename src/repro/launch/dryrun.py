@@ -28,7 +28,11 @@ from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.shapes import applicable
 from repro.dist.sharding import logical_to_sharding, set_mesh
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import model_flops_estimate, roofline_from_compiled
+from repro.launch.roofline import (
+    active_profile,
+    model_flops_estimate,
+    roofline_from_compiled,
+)
 from repro.models.model_zoo import build_model
 from repro.train.serve_step import make_decode_step, make_prefill
 from repro.train.train_step import (
@@ -198,9 +202,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
         mem = {"error": str(e)}
 
     mf = model_flops_estimate(cfg, shape)
-    roof = roofline_from_compiled(compiled, chips, model_flops=mf)
-    print("cost_analysis: flops/chip=%.3e bytes/chip=%.3e coll/chip=%.3e"
-          % (roof.flops, roof.hbm_bytes, roof.coll_bytes))
+    prof = active_profile()
+    roof = roofline_from_compiled(compiled, chips, model_flops=mf,
+                                  profile=prof)
+    print("cost_analysis: flops/chip=%.3e bytes/chip=%.3e coll/chip=%.3e "
+          "(ceilings: %s)"
+          % (roof.flops, roof.hbm_bytes, roof.coll_bytes, prof.source))
 
     result = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,

@@ -11,7 +11,9 @@ already per-partition on SPMD — we detect and normalize). collective_bytes
 is parsed from the partitioned HLO text: the summed operand bytes of every
 all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
 
-Hardware constants (TPU v5e-class, per chip):
+Ceilings come from :func:`active_profile`: the empirical per-device
+numbers measured by ``repro.tune`` when a tuning table for this device
+kind is active, else the hardcoded TPU v5e-class defaults (per chip):
   197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 """
 
@@ -20,14 +22,19 @@ from __future__ import annotations
 import dataclasses
 import re
 
-PEAK_FLOPS = 197e12      # bf16 / chip
-HBM_BW = 819e9           # bytes/s / chip
-ICI_BW = 50e9            # bytes/s/link / chip
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e default)
+HBM_BW = 819e9           # bytes/s / chip (v5e default)
+ICI_BW = 50e9            # bytes/s/link / chip (v5e default)
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+# Sizes accumulate in BITS and divide by 8 once at the aggregation
+# boundary, so sub-byte types (s4/u4 = 4 bits) price at 0.5 bytes per
+# element instead of rounding every element up to a whole byte and
+# double-counting packed-int4 traffic.
+_DTYPE_BITS = {
+    "pred": 8, "s4": 4, "u4": 4, "s8": 8, "u8": 8, "s16": 16, "u16": 16,
+    "f16": 16, "bf16": 16, "s32": 32, "u32": 32, "f32": 32, "s64": 64,
+    "u64": 64, "f64": 64, "c64": 64, "c128": 128, "f8e4m3fn": 8,
+    "f8e5m2": 8,
 }
 
 _COLLECTIVES = (
@@ -43,16 +50,16 @@ _DEF_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$", re.M)
 
 
-def _shape_bytes(dtype: str, dims: str) -> int:
+def _shape_bits(dtype: str, dims: str) -> int:
     n = 1
     if dims.strip():
         for d in dims.split(","):
             n *= int(d)
-    return n * _DTYPE_BYTES[dtype]
+    return n * _DTYPE_BITS[dtype]
 
 
-def _all_shape_bytes(s: str) -> int:
-    return sum(_shape_bytes(m.group(1), m.group(2))
+def _all_shape_bits(s: str) -> int:
+    return sum(_shape_bits(m.group(1), m.group(2))
                for m in _SHAPE_RE.finditer(s))
 
 
@@ -96,15 +103,16 @@ def _split_computations(hlo_text: str) -> dict[str, list[str]]:
     return comps
 
 
-def collective_bytes(hlo_text: str) -> dict[str, int]:
+def collective_bytes(hlo_text: str) -> dict[str, float]:
     """Sum collective operand bytes per kind across the whole program
     EXECUTION, i.e. collectives inside while-loop (lax.scan) bodies are
     multiplied by the loop trip count (read from the loop condition's
     integer constant), recursively for nested scans.
 
     The HLO printer usually omits inline operand types, so a symbol table
-    (instruction name -> result bytes) resolves operands. Async
-    '-start'/'-done' pairs count once (at -start).
+    (instruction name -> result bits) resolves operands; totals accumulate
+    in bits and convert to bytes once at the end (sub-byte types price
+    exactly). Async '-start'/'-done' pairs count once (at -start).
     """
     comps = _split_computations(hlo_text)
 
@@ -112,14 +120,14 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     sizes: dict[str, int] = {}
     for m in _DEF_RE.finditer(hlo_text):
         name, result_types, _, _ = m.groups()
-        sizes[name] = _all_shape_bytes(result_types)
+        sizes[name] = _all_shape_bits(result_types)
 
     def trip_count(cond_name: str) -> int:
         consts = [int(c) for line in comps.get(cond_name, ())
                   for c in _CONST_RE.findall(line)]
         return max(consts) if consts else 1
 
-    def comp_bytes(name: str, seen: frozenset) -> dict[str, int]:
+    def comp_bits(name: str, seen: frozenset) -> dict[str, int]:
         out = {k: 0 for k in _COLLECTIVES}
         if name in seen:
             return out
@@ -135,7 +143,7 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
             if base in _COLLECTIVES and not opname.endswith("-done"):
                 total = 0
                 for oname, odt, odims in _parse_operands(rest.split(")")[0]):
-                    total += (_shape_bytes(odt, odims) if odt
+                    total += (_shape_bits(odt, odims) if odt
                               else sizes.get(oname, 0))
                 out[base] += total
             elif base == "while":
@@ -143,7 +151,7 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
                 if wm:
                     cond, body = wm.groups()
                     trips = trip_count(cond)
-                    inner = comp_bytes(body, seen | {name})
+                    inner = comp_bits(body, seen | {name})
                     for k, v in inner.items():
                         out[k] += trips * v
         return out
@@ -159,10 +167,10 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
         # fall back: flat sum
         flat = {k: 0 for k in _COLLECTIVES}
         for name in comps:
-            for k, v in comp_bytes(name, frozenset({"__flat__"})).items():
+            for k, v in comp_bits(name, frozenset({"__flat__"})).items():
                 flat[k] += v
-        return flat
-    return comp_bytes(entry, frozenset())
+        return {k: v / 8 for k, v in flat.items()}
+    return {k: v / 8 for k, v in comp_bits(entry, frozenset()).items()}
 
 
 def exec_cost(hlo_text: str) -> tuple[float, float]:
@@ -177,6 +185,7 @@ def exec_cost(hlo_text: str) -> tuple[float, float]:
       * bytes: per scheduled instruction, operand + result bytes (the
         module is post-fusion, so an instruction ~= one kernel and its
         operands/results ~= its HBM traffic), skipping shape-only ops.
+        Accumulated in bits, converted to bytes once on return.
     """
     comps = _split_computations(hlo_text)
     shapes: dict[str, tuple[str, list[int]]] = {}
@@ -187,14 +196,14 @@ def exec_cost(hlo_text: str) -> tuple[float, float]:
             dims = [int(d) for d in sm.group(2).split(",") if d.strip()]
             shapes[name] = (sm.group(1), dims)
 
-    def nbytes(name: str) -> int:
+    def nbits(name: str) -> int:
         if name not in shapes:
             return 0
         dt, dims = shapes[name]
         n = 1
         for d in dims:
             n *= d
-        return n * _DTYPE_BYTES[dt]
+        return n * _DTYPE_BITS[dt]
 
     def trip_count(cond: str) -> int:
         consts = [int(c) for line in comps.get(cond, ())
@@ -272,17 +281,17 @@ def exec_cost(hlo_text: str) -> tuple[float, float]:
                             k *= lhs_dims[int(idx)]
                 flops += 2.0 * res_elems * k
             if count_bytes and base not in _SKIP:
-                res_bytes = _all_shape_bytes(result_types)
+                res_bytes = _all_shape_bits(result_types)
                 operand_str = rest.split(")")[0]
-                # per-operand bytes (NOT one summed total: the DUS check
+                # per-operand bits (NOT one summed total: the DUS check
                 # below needs to recognize the aliased full buffer among
                 # the operands)
                 op_bytes = []
                 for oname, odt, odims in _parse_operands(operand_str):
                     if odt:
-                        op_bytes.append(_shape_bytes(odt, odims))
+                        op_bytes.append(_shape_bits(odt, odims))
                     else:
-                        op_bytes.append(nbytes(oname))
+                        op_bytes.append(nbits(oname))
                 # in-place dynamic-update-slice (bare or fused): traffic is
                 # the UPDATE region (write + read), not the whole — possibly
                 # scan-carried, 100s-of-GB — buffer; likewise dynamic-slice
@@ -316,7 +325,38 @@ def exec_cost(hlo_text: str) -> tuple[float, float]:
             break
     if entry is None:
         return (0.0, 0.0)
-    return comp_cost(entry, frozenset())
+    flops, bits = comp_cost(entry, frozenset())
+    return (flops, bits / 8.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    """Per-chip roofline ceilings — measured or the v5e defaults."""
+
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+    source: str = "default:v5e"
+
+
+def active_profile() -> HardwareProfile:
+    """The profile roofline terms are priced against: ceilings measured by
+    ``repro.tune`` when a tuning table for this device kind is active
+    (``REPRO_TUNING_TABLE`` or ``repro.tune.set_active_table``), else the
+    hardcoded v5e-class defaults. ICI bandwidth is never measured by the
+    single-host microbench, so it stays at the default either way."""
+    try:
+        from repro.tune.table import measured_ceilings
+        ceil = measured_ceilings()
+    except Exception:  # tuning layer must never break a dryrun
+        ceil = None
+    if ceil and ceil.get("peak_flops") and ceil.get("hbm_bw"):
+        return HardwareProfile(
+            peak_flops=float(ceil["peak_flops"]),
+            hbm_bw=float(ceil["hbm_bw"]),
+            ici_bw=float(ceil.get("ici_bw") or ICI_BW),
+            source="measured")
+    return HardwareProfile()
 
 
 @dataclasses.dataclass
@@ -324,13 +364,15 @@ class RooflineReport:
     flops: float              # per-chip FLOPs per step
     hbm_bytes: float          # per-chip HBM traffic per step
     coll_bytes: float         # per-chip collective bytes per step
-    coll_breakdown: dict[str, int]
+    coll_breakdown: dict[str, float]
     chips: int
     t_compute: float
     t_memory: float
     t_collective: float
     bottleneck: str
     model_flops: float = 0.0  # 6*N*D useful flops (whole job)
+    peak_flops: float = PEAK_FLOPS   # ceiling the terms were priced with
+    profile_source: str = "default:v5e"
 
     @property
     def step_time_lower_bound(self) -> float:
@@ -342,7 +384,7 @@ class RooflineReport:
         if self.model_flops <= 0 or self.step_time_lower_bound <= 0:
             return 0.0
         return (self.model_flops / self.chips / self.step_time_lower_bound
-                / PEAK_FLOPS)
+                / self.peak_flops)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self) | {
@@ -351,25 +393,29 @@ class RooflineReport:
         }
 
 
-def roofline_from_compiled(compiled, chips: int, model_flops: float = 0.0
+def roofline_from_compiled(compiled, chips: int, model_flops: float = 0.0,
+                           profile: HardwareProfile | None = None
                            ) -> RooflineReport:
     # NOTE: compiled.cost_analysis() counts while-loop (lax.scan) bodies
     # once, underreporting a scanned L-layer model ~L-fold. exec_cost walks
     # the partitioned HLO with trip-count expansion instead; the module is
     # per-device so all terms are already /chip.
+    if profile is None:
+        profile = active_profile()
     text = compiled.as_text()
     flops, hbm = exec_cost(text)
     coll = collective_bytes(text)
     cbytes = float(sum(coll.values()))
-    t_c = flops / PEAK_FLOPS
-    t_m = hbm / HBM_BW
-    t_x = cbytes / ICI_BW
+    t_c = flops / profile.peak_flops
+    t_m = hbm / profile.hbm_bw
+    t_x = cbytes / profile.ici_bw
     terms = {"compute": t_c, "memory": t_m, "collective": t_x}
     bottleneck = max(terms, key=terms.get)
     return RooflineReport(
         flops=flops, hbm_bytes=hbm, coll_bytes=cbytes, coll_breakdown=coll,
         chips=chips, t_compute=t_c, t_memory=t_m, t_collective=t_x,
         bottleneck=bottleneck, model_flops=model_flops,
+        peak_flops=profile.peak_flops, profile_source=profile.source,
     )
 
 

@@ -181,7 +181,9 @@ class BankRegistry:
 
     def __init__(self, *, mesh=None, axis: str = "model",
                  pack: bool | str = "auto", max_banks: int | None = None,
-                 emulate_shards: int | None = None, fused: bool = False):
+                 emulate_shards: int | None = None, fused: bool = False,
+                 block_q: int | None = None, block_r: int | None = None,
+                 word_chunk: int | None = None):
         if max_banks is not None and max_banks < 1:
             raise ValueError(f"max_banks must be >= 1, got {max_banks}")
         self.mesh = mesh
@@ -190,6 +192,11 @@ class BankRegistry:
         self.max_banks = max_banks
         self.emulate_shards = emulate_shards
         self.fused = fused
+        # explicit kernel tile overrides applied to every bank this
+        # registry builds (None defers to tuning table / defaults)
+        self.block_q = block_q
+        self.block_r = block_r
+        self.word_chunk = word_chunk
         self._specs: dict[str, _BankSpec] = {}
         self._built: collections.OrderedDict[str, Any] = collections.OrderedDict()
         self._deltas: dict[str, Any] = {}  # tenant -> DeltaBank
@@ -259,7 +266,9 @@ class BankRegistry:
                                 axis=self.axis, pack=self.pack,
                                 emulate_shards=self.emulate_shards,
                                 fused=self.fused, precursor=spec.precursor,
-                                decoy_precursor=spec.decoy_precursor)
+                                decoy_precursor=spec.decoy_precursor,
+                                block_q=self.block_q, block_r=self.block_r,
+                                word_chunk=self.word_chunk)
             self.builds += 1
             self._built[tenant] = db
         else:
@@ -362,7 +371,9 @@ class BankRegistry:
                             axis=self.axis, pack=self.pack,
                             emulate_shards=self.emulate_shards,
                             fused=self.fused, precursor=precursor,
-                            decoy_precursor=decoy_precursor)
+                            decoy_precursor=decoy_precursor,
+                            block_q=self.block_q, block_r=self.block_r,
+                            word_chunk=self.word_chunk)
         self.builds += 1
         # atomic swap: spec + built bank + delta change together, and only
         # for this tenant

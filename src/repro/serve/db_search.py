@@ -82,6 +82,7 @@ from repro.core.hd.similarity import (
     hamming_similarity_packed,
     topk_search,
 )
+from repro.kernels.block_utils import validate_block
 from repro.serve.cache import BankRegistry, QueryHVCache
 from repro.serve.clustering import ClusteringConfig, StreamingClusterer
 from repro.serve.oms import (
@@ -132,7 +133,9 @@ def _local_topk(scores, base, k: int, num_rows: int):
 
 
 def _local_topk_fused(queries, refs_local, base, k: int, num_rows: int,
-                      dim: int):
+                      dim: int, block_q: int | None = None,
+                      block_r: int | None = None,
+                      word_chunk: int | None = None):
     """Fused twin of ``_local_scores`` + ``_local_topk``: the streaming
     Pallas kernel computes tile scores and keeps the running top-k in
     VMEM, so this shard's (Q, Rl) score matrix never reaches HBM.
@@ -141,7 +144,9 @@ def _local_topk_fused(queries, refs_local, base, k: int, num_rows: int,
     shard_map path); the kernel masks rows past ``num_rows - base`` to
     the same sentinel ``_local_topk`` uses, and returns local indices
     that translate to global rows by adding ``base`` — bit-identical to
-    the unfused pair, tie order included.
+    the unfused pair, tie order included. Block overrides (the bank's
+    ``shard_database(..., block_q=...)`` settings) pass straight to the
+    kernel; None defers to the tuning table / defaults.
     """
     # deferred like similarity.topk_search_packed: the kernel package is
     # only pulled in when a fused bank is actually searched
@@ -150,7 +155,8 @@ def _local_topk_fused(queries, refs_local, base, k: int, num_rows: int,
     num_valid = jnp.clip(jnp.asarray(num_rows - base, jnp.int32),
                          0, shard_rows)
     idx, vals = topk_hamming_pallas(queries, refs_local, dim=dim, k=k,
-                                    num_valid=num_valid)
+                                    num_valid=num_valid, block_q=block_q,
+                                    block_r=block_r, word_chunk=word_chunk)
     return vals, idx + jnp.asarray(base, jnp.int32)
 
 
@@ -258,6 +264,11 @@ class ShardedDatabase:
     emulated_shards: int = 1
     fused: bool = False
     oms: PrecursorIndex | None = None
+    # explicit per-bank kernel tile overrides for the fused paths; None
+    # defers to the active tuning table / defaults at trace time
+    block_q: int | None = None
+    block_r: int | None = None
+    word_chunk: int | None = None
 
     @property
     def num_targets(self) -> int:
@@ -276,7 +287,10 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
                    emulate_shards: int | None = None,
                    fused: bool = False,
                    precursor: np.ndarray | None = None,
-                   decoy_precursor: np.ndarray | None = None
+                   decoy_precursor: np.ndarray | None = None,
+                   block_q: int | None = None,
+                   block_r: int | None = None,
+                   word_chunk: int | None = None
                    ) -> ShardedDatabase:
     """Build a :class:`ShardedDatabase` from bipolar (R, D) reference HVs.
 
@@ -298,9 +312,19 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
       survives) with the permutation kept for index translation.
     decoy_precursor: per-decoy masses; defaults to ``precursor`` (decoys
       from ``make_decoys`` reverse the m/z axis but keep the mass).
+    block_q/block_r/word_chunk: explicit kernel tile sizes for this bank's
+      fused search paths (validated here against the TPU tile alignment);
+      ``None`` defers to the active tuning table / kernel defaults at
+      trace time (:mod:`repro.kernels.block_utils`). The OMS banded
+      routes keep their fixed ``block_q``/``block_r`` (the host-side tile
+      budget is priced in those units) regardless of these overrides.
     The padded bank is device_put row-sharded over ``axis`` when a mesh
     with that axis (size > 1) is supplied; otherwise it stays local.
     """
+    for _name, _val in (("block_q", block_q), ("block_r", block_r),
+                        ("word_chunk", word_chunk)):
+        if _val is not None:
+            validate_block("topk_hamming", _name, _val)
     dim = int(refs.shape[-1])
     num_decoys = 0
     bank = refs
@@ -357,21 +381,30 @@ def shard_database(refs: jax.Array, *, decoys: jax.Array | None = None,
                            dim=dim, shard_rows=shard_rows, packed=packed,
                            mesh=mesh if mesh_n > 1 else None, axis=axis,
                            emulated_shards=emu if mesh_n == 1 else 1,
-                           fused=bool(fused), oms=oms_index)
+                           fused=bool(fused), oms=oms_index,
+                           block_q=block_q, block_r=block_r,
+                           word_chunk=word_chunk)
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_search_fn(mesh: Mesh, axis: str, shard_rows: int, num_rows: int,
                        dim: int, packed: bool, k: int, batch_sharded: bool,
-                       fused: bool = False):
-    """Compile the shard_map search for one (db geometry, k, batch) shape."""
+                       fused: bool = False,
+                       blocks: tuple[int | None, ...] = (None, None, None)):
+    """Compile the shard_map search for one (db geometry, k, batch,
+    block-override) signature — ``blocks`` is (block_q, block_r,
+    word_chunk) and joins the cache key so banks with different explicit
+    tiles never share a stale compile."""
     q_spec = P("data", None) if batch_sharded else P(None, None)
+    block_q, block_r, word_chunk = blocks
 
     def body(q, refs_local):
         base = jax.lax.axis_index(axis).astype(jnp.int32) * shard_rows
         if fused:
             vals, gidx = _local_topk_fused(q, refs_local, base, k, num_rows,
-                                           dim)
+                                           dim, block_q=block_q,
+                                           block_r=block_r,
+                                           word_chunk=word_chunk)
         else:
             scores = _local_scores(q, refs_local, dim=dim, packed=packed)
             vals, gidx = _local_topk(scores, base, k, num_rows)
@@ -445,7 +478,8 @@ def search_database_encoded(db: ShardedDatabase, q_enc: jax.Array, k: int
                 if db.fused:
                     vals, gidx = _local_topk_fused(
                         q_enc, r_local, s * db.shard_rows, k, db.num_rows,
-                        db.dim)
+                        db.dim, block_q=db.block_q, block_r=db.block_r,
+                        word_chunk=db.word_chunk)
                 else:
                     scores = _local_scores(q_enc, r_local, dim=db.dim,
                                            packed=db.packed)
@@ -457,7 +491,9 @@ def search_database_encoded(db: ShardedDatabase, q_enc: jax.Array, k: int
                                jnp.concatenate(idx_blocks, axis=1), k)
         if db.fused:
             vals, gidx = _local_topk_fused(q_enc, db.data, 0, k, db.num_rows,
-                                           db.dim)
+                                           db.dim, block_q=db.block_q,
+                                           block_r=db.block_r,
+                                           word_chunk=db.word_chunk)
             return gidx, vals
         scores = _local_scores(q_enc, db.data, dim=db.dim, packed=db.packed)
         vals, gidx = _local_topk(scores, 0, k, db.num_rows)
@@ -466,7 +502,8 @@ def search_database_encoded(db: ShardedDatabase, q_enc: jax.Array, k: int
     data_n = db.mesh.shape.get("data", 1)
     batch_sharded = data_n > 1 and q_enc.shape[0] % data_n == 0
     fn = _sharded_search_fn(db.mesh, db.axis, db.shard_rows, db.num_rows,
-                            db.dim, db.packed, k, batch_sharded, db.fused)
+                            db.dim, db.packed, k, batch_sharded, db.fused,
+                            (db.block_q, db.block_r, db.word_chunk))
     return fn(q_enc, db.data)
 
 
@@ -644,16 +681,22 @@ def _check_levels(db: ShardedDatabase, enc: QueryEncoder, levels) -> None:
 
 
 def _local_topk_e2e(levels, enc: QueryEncoder, refs_local, base, k: int,
-                    num_rows: int, dim: int):
+                    num_rows: int, dim: int, block_q: int | None = None,
+                    block_r: int | None = None,
+                    word_chunk: int | None = None):
     """Fully-fused per-shard twin of encode + ``_local_topk_fused``: one
     Pallas dispatch encodes the raw levels (Eq. 1), packs, and streams the
     shard's reference tiles — the query hypervector never reaches HBM.
-    Same sentinel masking and base translation as the staged pair."""
+    Same sentinel masking and base translation as the staged pair. The
+    bank's block overrides apply where the parameter names coincide
+    (``block_f`` always defers to the table / default)."""
     from repro.kernels.encode_search import encode_search_pallas
     shard_rows = refs_local.shape[0]
     nv = jnp.clip(jnp.asarray(num_rows - base, jnp.int32), 0, shard_rows)
     idx, vals = encode_search_pallas(levels, enc.id_hvs, enc.level_hvs,
-                                     refs_local, dim=dim, k=k, num_valid=nv)
+                                     refs_local, dim=dim, k=k, num_valid=nv,
+                                     block_q=block_q, block_r=block_r,
+                                     word_chunk=word_chunk)
     return vals, idx + jnp.asarray(base, jnp.int32)
 
 
@@ -686,11 +729,14 @@ def _local_oms_e2e(levels, enc: QueryEncoder, refs_local, base, k: int,
 
 @functools.lru_cache(maxsize=None)
 def _sharded_e2e_fn(mesh: Mesh, axis: str, shard_rows: int, num_rows: int,
-                    dim: int, k: int, batch_sharded: bool):
-    """Compile the shard_map fused-e2e search for one (geometry, k, batch)
-    shape. Codebooks are replicated; only the bank is row-sharded."""
+                    dim: int, k: int, batch_sharded: bool,
+                    blocks: tuple[int | None, ...] = (None, None, None)):
+    """Compile the shard_map fused-e2e search for one (geometry, k, batch,
+    block-override) signature. Codebooks are replicated; only the bank is
+    row-sharded."""
     q_spec = P("data", None) if batch_sharded else P(None, None)
     rep = P(None, None)
+    block_q, block_r, word_chunk = blocks
 
     def body(levels, id_hvs, level_hvs, refs_local):
         from repro.kernels.encode_search import encode_search_pallas
@@ -698,7 +744,9 @@ def _sharded_e2e_fn(mesh: Mesh, axis: str, shard_rows: int, num_rows: int,
         nv = jnp.clip(num_rows - base, 0, shard_rows)
         idx, vals = encode_search_pallas(levels, id_hvs, level_hvs,
                                          refs_local, dim=dim, k=k,
-                                         num_valid=nv)
+                                         num_valid=nv, block_q=block_q,
+                                         block_r=block_r,
+                                         word_chunk=word_chunk)
         vals_all = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
         idx_all = jax.lax.all_gather(idx + base, axis, axis=1, tiled=True)
         return _merge_topk(vals_all, idx_all, k)
@@ -764,19 +812,25 @@ def search_database_levels(db: ShardedDatabase, enc: QueryEncoder,
                 r_local = db.data[s * db.shard_rows:(s + 1) * db.shard_rows]
                 vals, gidx = _local_topk_e2e(levels, enc, r_local,
                                              s * db.shard_rows, k,
-                                             db.num_rows, db.dim)
+                                             db.num_rows, db.dim,
+                                             block_q=db.block_q,
+                                             block_r=db.block_r,
+                                             word_chunk=db.word_chunk)
                 vals_blocks.append(vals)
                 idx_blocks.append(gidx)
             return _merge_topk(jnp.concatenate(vals_blocks, axis=1),
                                jnp.concatenate(idx_blocks, axis=1), k)
         vals, gidx = _local_topk_e2e(levels, enc, db.data, 0, k,
-                                     db.num_rows, db.dim)
+                                     db.num_rows, db.dim,
+                                     block_q=db.block_q, block_r=db.block_r,
+                                     word_chunk=db.word_chunk)
         return gidx, vals
 
     data_n = db.mesh.shape.get("data", 1)
     batch_sharded = data_n > 1 and levels.shape[0] % data_n == 0
     fn = _sharded_e2e_fn(db.mesh, db.axis, db.shard_rows, db.num_rows,
-                         db.dim, k, batch_sharded)
+                         db.dim, k, batch_sharded,
+                         (db.block_q, db.block_r, db.word_chunk))
     return fn(levels, enc.id_hvs, enc.level_hvs, db.data)
 
 

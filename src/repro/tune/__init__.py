@@ -1,0 +1,47 @@
+"""Empirical autotuner for the kernel layer (ERT-style).
+
+Measures real per-device ceilings (:mod:`repro.tune.microbench`), sweeps
+kernel block sizes against them (:mod:`repro.tune.sweep`), and persists
+the winners in a JSON table (:mod:`repro.tune.table`) that the kernel ops
+layers load at trace time — with a clean fallback to the hand-tuned
+128x128-class defaults whenever no table (or no matching device kind /
+shape bucket) is available. ``repro.launch.tune`` is the CLI front end.
+"""
+
+from repro.tune.microbench import (
+    measure_ceilings,
+    measure_mem_bandwidth,
+    measure_peak_flops,
+)
+from repro.tune.sweep import build_tuning_table, sweep_op, tuned_vs_default_ratio
+from repro.tune.table import (
+    ENV_VAR,
+    TuningTable,
+    active_table,
+    device_kind,
+    load_table,
+    lookup_blocks,
+    measured_ceilings,
+    reset,
+    set_active_table,
+    shape_bucket,
+)
+
+__all__ = [
+    "ENV_VAR",
+    "TuningTable",
+    "active_table",
+    "build_tuning_table",
+    "device_kind",
+    "load_table",
+    "lookup_blocks",
+    "measure_ceilings",
+    "measure_mem_bandwidth",
+    "measure_peak_flops",
+    "measured_ceilings",
+    "reset",
+    "set_active_table",
+    "shape_bucket",
+    "sweep_op",
+    "tuned_vs_default_ratio",
+]

@@ -1,0 +1,103 @@
+"""ERT-style device-ceiling microbenchmarks.
+
+The Empirical Roofline Toolkit measures a machine's *achievable* ceilings
+by sweeping working sets: peak compute from matmuls of growing size (small
+ones are launch-bound, large ones saturate the FMA units), and memory
+bandwidth from streaming copies of growing size (small ones live in cache,
+large ones stream from DRAM/HBM). We take the max achieved rate across the
+sweep as the ceiling — the same harness shape as the Berkeley ERT and the
+Intel-Advisor roofline checks referenced in ROADMAP.
+
+These numbers replace the hardcoded TPU-v5e constants in
+``repro.launch.roofline`` whenever a tuning table measured on the local
+device kind is active, so roofline verdicts (compute- vs memory- vs
+ICI-bound) are priced for the machine actually running, not a v5e that
+may not exist here.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _median_time(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds of ``fn(*args)`` with device sync."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def measure_peak_flops(sizes: tuple[int, ...] | None = None,
+                       iters: int = 5) -> dict:
+    """Peak achieved FLOP/s from a growing-matmul sweep.
+
+    Square float32 matmuls of side n cost ``2 n^3`` FLOPs; the max rate
+    across the sweep is the empirical compute ceiling. Returns
+    ``{"peak_flops", "by_size": {n: flops_per_s}}``.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    sizes = sizes or (256, 512, 1024, 2048)
+    f = jax.jit(lambda a, b: a @ b)
+    rng = np.random.default_rng(0)
+    by_size = {}
+    for n in sizes:
+        a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+        t = _median_time(f, a, b, iters=iters)
+        by_size[int(n)] = 2.0 * n ** 3 / t
+    return {"peak_flops": max(by_size.values()), "by_size": by_size}
+
+
+def measure_mem_bandwidth(sizes_mb: tuple[float, ...] | None = None,
+                          iters: int = 5) -> dict:
+    """Peak achieved memory bandwidth from a growing-copy sweep.
+
+    ``x + 1`` streams one read + one write per element (a pure copy can
+    be aliased away by XLA); bytes moved per call = 2 x array bytes. The
+    max GB/s across the sweep is the empirical bandwidth ceiling.
+    Returns ``{"hbm_bw", "by_size_mb": {mb: bytes_per_s}}``.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    sizes_mb = sizes_mb or (4, 16, 64, 256)
+    f = jax.jit(lambda x: x + 1.0)
+    rng = np.random.default_rng(1)
+    by_size = {}
+    for mb in sizes_mb:
+        n = int(mb * (1 << 20) // 4)
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        t = _median_time(f, x, iters=iters)
+        by_size[float(mb)] = 2.0 * n * 4 / t
+    return {"hbm_bw": max(by_size.values()), "by_size_mb": by_size}
+
+
+def measure_ceilings(quick: bool = False) -> dict:
+    """Both sweeps -> the ``ceilings`` dict a :class:`~repro.tune.table.
+    TuningTable` persists (``peak_flops`` / ``hbm_bw`` in SI units, plus
+    the per-size curves for inspection). ``quick`` shrinks the sweep for
+    CI — ceilings are then lower bounds, which is the safe direction for
+    a roofline (terms look *more* expensive, never cheaper than real)."""
+    sizes = (256, 512, 1024) if quick else (256, 512, 1024, 2048)
+    mbs = (4.0, 16.0, 64.0) if quick else (4.0, 16.0, 64.0, 256.0)
+    iters = 3 if quick else 5
+    flops = measure_peak_flops(sizes, iters=iters)
+    bw = measure_mem_bandwidth(mbs, iters=iters)
+    return {
+        "peak_flops": flops["peak_flops"],
+        "hbm_bw": bw["hbm_bw"],
+        "flops_by_size": {str(k): v for k, v in flops["by_size"].items()},
+        "bw_by_size_mb": {str(k): v for k, v in bw["by_size_mb"].items()},
+        "quick": bool(quick),
+    }

@@ -1,0 +1,232 @@
+"""Persisted tuning tables: measured ceilings + winning block configs.
+
+A table is one JSON file produced by ``repro.launch.tune`` (the ERT-style
+sweep in :mod:`repro.tune.sweep`):
+
+.. code-block:: json
+
+    {
+      "schema": 1,
+      "device_kind": "cpu",
+      "ceilings": {"peak_flops": 1.1e11, "hbm_bw": 2.3e10, ...},
+      "ops": {
+        "topk_hamming": {
+          "q128_r8192_w32": {
+            "blocks": {"block_q": 32, "block_r": 256, "word_chunk": 32},
+            "us": 412.0, "default_us": 508.0
+          }
+        }
+      }
+    }
+
+Lookups are keyed by (device kind, op, shape bucket):
+
+* **device kind** — the table records the ``jax.devices()[0].device_kind``
+  it was measured on; a table written on one device kind is *never*
+  silently applied on another (one-time log line, then defaults);
+* **shape bucket** — each shape dimension rounds up to a power of two
+  (:func:`shape_bucket`), so nearby problem sizes share one entry;
+* a corrupt / partial / schema-mismatched JSON file degrades to "no
+  table" with a one-time log line — it can never raise into the serving
+  path — and individual entries whose blocks violate the kernel's tile
+  alignment are dropped at load (``block_utils.block_aligned``).
+
+The active table is chosen by the ``REPRO_TUNING_TABLE`` env var (a file
+path) or programmatically via :func:`set_active_table`, and cached for
+the process; :func:`reset` clears the cache (tests, table rewrites).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+from pathlib import Path
+
+SCHEMA = 1
+ENV_VAR = "REPRO_TUNING_TABLE"
+
+log = logging.getLogger("repro.tune")
+
+# one-time-log bookkeeping: messages keyed by reason so each distinct
+# fallback cause is reported exactly once per process
+_logged: set[str] = set()
+
+
+def _log_once(key: str, msg: str) -> None:
+    if key not in _logged:
+        _logged.add(key)
+        log.warning(msg)
+
+
+def device_kind() -> str:
+    """The local accelerator kind the table is keyed by (e.g. ``cpu``,
+    ``TPU v5e``)."""
+    import jax
+    return str(jax.devices()[0].device_kind)
+
+
+def _pow2_ceil(n: int) -> int:
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def shape_bucket(shape: tuple[int, ...]) -> str:
+    """Power-of-two bucket key for an op shape tuple, e.g. ``(100, 8000,
+    32)`` -> ``"128x8192x32"`` — nearby problem sizes share one tuned
+    entry, and the sweep only has to measure one representative per
+    bucket."""
+    return "x".join(str(_pow2_ceil(d)) for d in shape)
+
+
+@dataclasses.dataclass
+class TuningTable:
+    """In-memory form of one persisted table (see module docstring)."""
+
+    device_kind: str
+    ceilings: dict = dataclasses.field(default_factory=dict)
+    ops: dict = dataclasses.field(default_factory=dict)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def lookup(self, op: str, shape: tuple[int, ...]) -> dict | None:
+        """Winning blocks for (op, bucket of shape), or None."""
+        entry = self.ops.get(op, {}).get(shape_bucket(shape))
+        if not entry:
+            return None
+        return dict(entry.get("blocks") or {}) or None
+
+    def set_entry(self, op: str, shape: tuple[int, ...], blocks: dict,
+                  **extra) -> None:
+        self.ops.setdefault(op, {})[shape_bucket(shape)] = {
+            "blocks": dict(blocks), **extra}
+
+    def to_json(self) -> dict:
+        return {"schema": SCHEMA, "device_kind": self.device_kind,
+                "ceilings": self.ceilings, "ops": self.ops,
+                "meta": self.meta}
+
+    def save(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(path.suffix + ".tmp")
+        tmp.write_text(json.dumps(self.to_json(), indent=2) + "\n")
+        tmp.replace(path)  # atomic: readers never see a partial table
+        return path
+
+
+def _sanitize_ops(ops: dict, source: str) -> dict:
+    """Drop table entries whose blocks violate the kernel's tile
+    alignment (or whose op is unknown) — a hand-edited or stale table
+    degrades entry-by-entry instead of poisoning a trace."""
+    from repro.kernels.block_utils import ALIGN, block_aligned
+    clean: dict = {}
+    for op, buckets in ops.items():
+        if op not in ALIGN or not isinstance(buckets, dict):
+            _log_once(f"op:{op}", f"tuning table {source}: unknown op "
+                                  f"{op!r} ignored")
+            continue
+        for bucket, entry in buckets.items():
+            blocks = (entry or {}).get("blocks")
+            if not isinstance(blocks, dict) or not block_aligned(op, blocks):
+                _log_once(
+                    f"entry:{op}/{bucket}",
+                    f"tuning table {source}: entry {op}/{bucket} has "
+                    f"misaligned blocks {blocks!r}; entry dropped")
+                continue
+            clean.setdefault(op, {})[bucket] = entry
+    return clean
+
+
+def load_table(path: str | Path) -> TuningTable | None:
+    """Parse a table file; corrupt/partial/unreadable -> None (one-time
+    log line), never an exception."""
+    path = Path(path)
+    try:
+        raw = json.loads(path.read_text())
+        if not isinstance(raw, dict) or raw.get("schema") != SCHEMA \
+                or not isinstance(raw.get("device_kind"), str):
+            raise ValueError(f"not a schema-{SCHEMA} tuning table")
+        return TuningTable(
+            device_kind=raw["device_kind"],
+            ceilings=dict(raw.get("ceilings") or {}),
+            ops=_sanitize_ops(dict(raw.get("ops") or {}), path.name),
+            meta=dict(raw.get("meta") or {}),
+        )
+    except (OSError, ValueError, TypeError, AttributeError) as e:
+        _log_once(f"load:{path}", f"tuning table {path}: unreadable "
+                                  f"({e}); falling back to default blocks")
+        return None
+
+
+# process-wide active-table cache: (resolved-or-None, cache key). The key
+# records which env-var value the cache was built from so an env change
+# between calls is picked up without an explicit reset().
+_active: TuningTable | None = None
+_active_key: object = None
+_OVERRIDE = object()  # sentinel key marking a set_active_table() override
+
+
+def set_active_table(table: TuningTable | str | Path | None) -> None:
+    """Programmatically install (or clear, with None) the active table —
+    used by tests and by the tune CLI right after writing a table."""
+    global _active, _active_key
+    if isinstance(table, (str, Path)):
+        table = load_table(table)
+    _active = table
+    _active_key = _OVERRIDE if table is not None else None
+
+
+def reset() -> None:
+    """Drop the active-table cache and the one-time-log memory (tests)."""
+    global _active, _active_key
+    _active = None
+    _active_key = None
+    _logged.clear()
+
+
+def active_table() -> TuningTable | None:
+    """The table the ops layer consults, or None.
+
+    Resolution order: a :func:`set_active_table` override, else the
+    ``REPRO_TUNING_TABLE`` env var. A table recorded on a different
+    device kind than the local one is rejected here (one-time log) — a
+    config swept on a TPU must not steer CPU traces or vice versa.
+    """
+    global _active, _active_key
+    if _active_key is _OVERRIDE:
+        table = _active
+    else:
+        env = os.environ.get(ENV_VAR) or None
+        if env != _active_key:
+            _active = load_table(env) if env else None
+            _active_key = env
+        table = _active
+    if table is None:
+        return None
+    local = device_kind()
+    if table.device_kind != local:
+        _log_once(
+            f"kind:{table.device_kind}->{local}",
+            f"tuning table was measured on device kind "
+            f"{table.device_kind!r} but this process runs on {local!r}; "
+            f"ignoring it (default blocks apply)")
+        return None
+    return table
+
+
+def lookup_blocks(op: str, shape: tuple[int, ...]) -> dict | None:
+    """Tuned blocks for (active table, op, shape bucket), or None."""
+    table = active_table()
+    if table is None:
+        return None
+    return table.lookup(op, shape)
+
+
+def measured_ceilings() -> dict | None:
+    """The active table's measured device ceilings (for the roofline
+    profile), or None when no matching table is active."""
+    table = active_table()
+    if table is None or not table.ceilings:
+        return None
+    return dict(table.ceilings)

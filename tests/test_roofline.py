@@ -6,7 +6,9 @@ from repro.launch.roofline import (
     HBM_BW,
     ICI_BW,
     PEAK_FLOPS,
+    HardwareProfile,
     RooflineReport,
+    active_profile,
     collective_bytes,
 )
 
@@ -95,6 +97,31 @@ ENTRY %main () -> f32[4] {
     assert out["all-reduce"] == 16
 
 
+def test_sub_byte_types_priced_at_half_byte():
+    """s4/u4 operands must cost 0.5 bytes per element, not 1 (satellite-2
+    regression: packed-int4 traffic was double-counted)."""
+    hlo = """
+ENTRY %main () -> s4[16,64] {
+  %x = s4[16,64]{1,0} parameter(0)
+  ROOT %ar = s4[16,64]{1,0} all-reduce(s4[16,64]{1,0} %x), to_apply=%add
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 16 * 64 * 0.5
+
+
+def test_sub_byte_exec_cost_memory_term():
+    from repro.launch.roofline import exec_cost
+    hlo = """
+ENTRY %main () -> s4[128] {
+  %x = s4[128]{0} parameter(0)
+  ROOT %n = s4[128]{0} negate(s4[128]{0} %x)
+}
+"""
+    _, b = exec_cost(hlo)
+    assert b == 128 * 0.5 * 2  # operand + result, 4 bits each
+
+
 def test_roofline_report_terms():
     r = RooflineReport(
         flops=PEAK_FLOPS, hbm_bytes=HBM_BW / 2, coll_bytes=ICI_BW / 4,
@@ -102,6 +129,61 @@ def test_roofline_report_terms():
         t_collective=0.25, bottleneck="compute", model_flops=PEAK_FLOPS * 2)
     assert r.step_time_lower_bound == 1.0
     assert r.mfu_bound == pytest.approx(0.5)
+
+
+def test_mfu_bound_uses_report_ceiling():
+    r = RooflineReport(
+        flops=1e9, hbm_bytes=1.0, coll_bytes=0.0, coll_breakdown={},
+        chips=1, t_compute=1.0, t_memory=0.1, t_collective=0.0,
+        bottleneck="compute", model_flops=1e10, peak_flops=1e10,
+        profile_source="measured")
+    assert r.mfu_bound == pytest.approx(1.0)
+    assert r.to_dict()["profile_source"] == "measured"
+
+
+class TestHardwareProfile:
+    def test_defaults_match_v5e_constants(self):
+        p = HardwareProfile()
+        assert (p.peak_flops, p.hbm_bw, p.ici_bw) == (
+            PEAK_FLOPS, HBM_BW, ICI_BW)
+        assert p.source == "default:v5e"
+
+    def test_active_profile_defaults_without_table(self):
+        from repro.tune import table as tune_table
+        tune_table.reset()
+        try:
+            assert active_profile() == HardwareProfile()
+        finally:
+            tune_table.reset()
+
+    def test_active_profile_uses_measured_ceilings(self):
+        from repro.tune import table as tune_table
+        from repro.tune.table import TuningTable, device_kind, \
+            set_active_table
+        tune_table.reset()
+        try:
+            set_active_table(TuningTable(
+                device_kind=device_kind(),
+                ceilings={"peak_flops": 3.0e12, "hbm_bw": 4.0e11}))
+            p = active_profile()
+            assert p.source == "measured"
+            assert p.peak_flops == 3.0e12
+            assert p.hbm_bw == 4.0e11
+            assert p.ici_bw == ICI_BW  # never measured single-host
+        finally:
+            tune_table.reset()
+
+    def test_mismatched_kind_table_keeps_defaults(self):
+        from repro.tune import table as tune_table
+        from repro.tune.table import TuningTable, set_active_table
+        tune_table.reset()
+        try:
+            set_active_table(TuningTable(
+                device_kind="TPU v99",
+                ceilings={"peak_flops": 1.0, "hbm_bw": 1.0}))
+            assert active_profile() == HardwareProfile()
+        finally:
+            tune_table.reset()
 
 
 def test_model_flops_estimate_orders():
